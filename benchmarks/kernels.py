@@ -1,0 +1,64 @@
+"""Pallas kernel microbenchmarks (CPU: correctness-scale timings of the
+interpret path + XLA reference; the BlockSpec/VMEM reasoning for the TPU
+target is in EXPERIMENTS.md SS-Roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # gram: fleet-scale batch of pattern sets (B series x N patterns)
+    for B, N, D in ((64, 10, 11), (256, 20, 21), (64, 40, 41)):
+        xa = jax.random.normal(key, (B, N, D), jnp.float32)
+        jit_ref = jax.jit(jax.vmap(
+            lambda x: ref.gram(x, x, 1.0, 1.0, kind="exp")))
+        us = _time(jit_ref, xa)
+        gf = 2 * B * N * N * D / (us * 1e-6) / 1e9
+        rows.append(dict(name=f"gram_ref_B{B}_N{N}", us_per_call=us,
+                         derived=f"{gf:.2f}GFLOP/s"))
+
+    # attention: XLA ref at serving-ish sizes
+    for B, H, S, Dh in ((1, 8, 512, 64), (2, 16, 1024, 64)):
+        q = jax.random.normal(key, (B, H, S, Dh), jnp.float32)
+        jit_attn = jax.jit(lambda q: ref.attention(q, q, q, causal=True))
+        us = _time(jit_attn, q, iters=3)
+        fl = 4 * B * H * S * S * Dh
+        rows.append(dict(name=f"attn_ref_B{B}H{H}S{S}", us_per_call=us,
+                         derived=f"{fl / (us * 1e-6) / 1e9:.1f}GFLOP/s"))
+
+    # pallas interpret path (correctness-scale; Python interpreter speed,
+    # NOT representative of TPU throughput)
+    xa = jax.random.normal(key, (40, 41), jnp.float32)
+    us = _time(lambda x: ops.gram(x, x, 1.0, 1.0, kind="exp",
+                                  impl="pallas"), xa, iters=2)
+    rows.append(dict(name="gram_pallas_interp_N40", us_per_call=us,
+                     derived="interpret-mode"))
+    return rows
+
+
+def main(quick: bool = True) -> None:
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

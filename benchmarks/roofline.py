@@ -1,0 +1,180 @@
+"""Roofline analysis from the dry-run artifacts (TPU v5e targets).
+
+Per (arch x shape x mesh) cell, from the loop-corrected per-device HLO
+costs (benchmarks/hlo_analysis.py via dryrun_results.json):
+
+    compute_s    = HLO_flops   / PEAK_FLOPS          (197 TF/s bf16)
+    memory_s     = HLO_bytes   / HBM_BW              (819 GB/s)
+    collective_s = coll_bytes  / LINK_BW             (~50 GB/s/link ICI)
+
+plus MODEL_FLOPS (6*N*D train / 2*N*D forward; N_active for MoE), the
+useful-compute ratio MODEL_FLOPS/HLO_flops, the dominant term, and the
+ROOFLINE FRACTION = useful_compute_time / max(term) — the fraction of
+the best-achievable step time spent doing model math.  This is the
+number §Perf hillclimbs.
+
+Usage: python -m benchmarks.roofline [--json dryrun_results.json]
+       [--mesh single] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+CHIPS = {"single": 256, "multi": 512}
+
+
+def model_flops(rec: dict) -> float:
+    """Useful model flops for the whole step, GLOBAL (all chips)."""
+    n_active = rec.get("n_active") or rec["n_params"]
+    seq, batch = rec["seq"], rec["batch"]
+    kind = rec["kind"]
+    if kind == "train":
+        return 6.0 * n_active * seq * batch
+    if kind == "prefill":
+        return 2.0 * n_active * seq * batch
+    # decode: one token per sequence + attention over the cache
+    return 2.0 * n_active * batch
+
+
+def analyze_cell(rec: dict) -> dict | None:
+    if not rec.get("ok") or "hlo" not in rec or "flops" not in rec.get(
+            "hlo", {}):
+        return None
+    chips = CHIPS[rec["mesh"]]
+    h = rec["hlo"]
+    compute_s = h["flops"] / PEAK_FLOPS
+    memory_s = h["bytes"] / HBM_BW
+    coll_s = h["collective_bytes"] / LINK_BW
+    bound = max((compute_s, "compute"), (memory_s, "memory"),
+                (coll_s, "collective"))[1]
+    mf = model_flops(rec) / chips          # per device
+    # the IDEAL step time is the larger of the useful-compute roofline
+    # and the useful-traffic roofline.  Useful traffic = the program's
+    # live inputs per device (params [+ opt state, + KV cache]) read
+    # once — taken from the dry-run's own memory analysis, so decode
+    # (inherently memory-bound) is scored against the memory roof, not
+    # an unreachable flops-only ideal.
+    arg_bytes = rec.get("memory", {}).get("argument_size_in_bytes", 0)
+    ideal_s = max(mf / PEAK_FLOPS, arg_bytes / HBM_BW)
+    step_s = max(compute_s, memory_s, coll_s)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "bound": bound,
+        "model_flops_dev": mf, "hlo_flops_dev": h["flops"],
+        "useful_ratio": mf / h["flops"] if h["flops"] else 0.0,
+        "ideal_s": ideal_s,
+        "roofline_frac": ideal_s / step_s if step_s else 0.0,
+        "step_s": step_s,
+        "arg_bytes_dev": arg_bytes,
+        "temp_bytes_dev": rec.get("memory", {}).get("temp_size_in_bytes"),
+    }
+
+
+def load(path: str, mesh: str = "single",
+         variant: str = "default") -> list[dict]:
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for rec in results.values():
+        if rec.get("mesh") != mesh:
+            continue
+        if rec.get("variant", "default") != variant:
+            continue
+        if rec.get("skipped"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "skipped": True,
+                         "reason": rec["reason"]})
+            continue
+        row = analyze_cell(rec)
+        if row:
+            rows.append(row)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def print_table(rows: list[dict], markdown: bool = False) -> None:
+    hdr = ("arch", "shape", "compute", "memory", "collective", "bound",
+           "useful", "roofline")
+    if markdown:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(",".join(hdr))
+    for r in rows:
+        if r.get("skipped"):
+            cells = (r["arch"], r["shape"], "SKIP", "-", "-", "-", "-", "-")
+        else:
+            cells = (r["arch"], r["shape"], fmt_s(r["compute_s"]),
+                     fmt_s(r["memory_s"]), fmt_s(r["collective_s"]),
+                     r["bound"], f"{r['useful_ratio']:.2f}",
+                     f"{r['roofline_frac']:.3f}")
+        if markdown:
+            print("| " + " | ".join(str(c) for c in cells) + " |")
+        else:
+            print(",".join(str(c) for c in cells))
+
+
+def pick_hillclimb(rows: list[dict]) -> dict:
+    live = [r for r in rows if not r.get("skipped")]
+    picks: dict[str, dict] = {}
+
+    def taken(r):
+        return any(p["arch"] == r["arch"] and p["shape"] == r["shape"]
+                   for p in picks.values())
+
+    picks["worst_roofline"] = min(live, key=lambda r: r["roofline_frac"])
+    picks["most_collective_bound"] = max(
+        (r for r in live if not taken(r)),
+        key=lambda r: r["collective_s"] / max(r["step_s"], 1e-30))
+    # most representative of the paper: the serving cell whose elastic
+    # resource (the KV cache in HBM) the shaper governs — the biggest
+    # decode cell not already picked
+    decodes = [r for r in live if r["kind"] == "decode" and not taken(r)]
+    picks["paper_representative"] = (
+        max(decodes, key=lambda r: r["step_s"]) if decodes
+        else picks["worst_roofline"])
+    return picks
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="dryrun_results.json")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi"])
+    ap.add_argument("--variant", default="default",
+                    choices=["default", "opt"])
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = load(args.json, args.mesh, args.variant)
+    print_table(rows, markdown=args.markdown)
+    picks = pick_hillclimb(rows)
+    print()
+    for why, r in picks.items():
+        print(f"# hillclimb[{why}]: {r['arch']} x {r['shape']} "
+              f"(bound={r['bound']}, roofline={r['roofline_frac']:.3f})")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"rows": rows, "picks": {
+                k: {kk: v[kk] for kk in ("arch", "shape", "bound",
+                                         "roofline_frac")}
+                for k, v in picks.items()}}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+  fig2   forecast-error distributions (ARIMA vs GP-Exp vs GP-RBF)
+  fig3   oracle-based policy comparison (baseline/optimistic/pessimistic)
+  fig4   K1 x K2 safeguard heat maps (ARIMA + GP)
+  fig5   prototype: baseline vs dynamic on live training jobs
+  kernels  Pallas kernel microbenches
+  roofline dry-run-derived roofline table (if dryrun_results.json exists)
+
+``python -m benchmarks.run [--only SECTION] [--full]``
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+SECTIONS = ("fig2", "fig3", "fig4", "fig5", "kernels", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=SECTIONS)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale runs (hours); default is CI scale")
+    args = ap.parse_args()
+    quick = not args.full
+    sections = [args.only] if args.only else list(SECTIONS)
+    failures = 0
+
+    for sec in sections:
+        print(f"\n===== {sec} " + "=" * (60 - len(sec)), flush=True)
+        t0 = time.time()
+        try:
+            if sec == "fig2":
+                from benchmarks import forecast_error
+                forecast_error.main(quick)
+            elif sec == "fig3":
+                from benchmarks import oracle_policies
+                oracle_policies.main(quick)
+            elif sec == "fig4":
+                from benchmarks import beta_heatmap
+                beta_heatmap.main(quick)
+            elif sec == "fig5":
+                from benchmarks import prototype
+                prototype.main(quick)
+            elif sec == "kernels":
+                from benchmarks import kernels
+                kernels.main(quick)
+            elif sec == "roofline":
+                if os.path.exists("dryrun_results.json"):
+                    from benchmarks import roofline
+                    rows = roofline.load("dryrun_results.json", "single")
+                    roofline.print_table(rows)
+                    for why, r in roofline.pick_hillclimb(rows).items():
+                        print(f"# hillclimb[{why}]: {r['arch']} x "
+                              f"{r['shape']} bound={r['bound']}")
+                else:
+                    print("dryrun_results.json not found — run "
+                          "`python -m repro.launch.dryrun` first")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"----- {sec} done in {time.time() - t0:.0f}s", flush=True)
+
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Serving demo: batched decode with a shaper-governed batch cap.
+
+The KV cache is the finite resource; the forecaster + safeguard buffer
+set how many request slots the scheduler may fill (see
+repro/launch/serve.py for the full driver).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    stats = main(["--arch", "internlm2-1.8b", "--smoke",
+                  "--requests", "24", "--max-batch", "6",
+                  "--prompt-len", "24", "--gen-len", "8"] + sys.argv[1:])
+    print("serve_demo OK:", stats)

@@ -1,0 +1,4 @@
+"""Checkpointing: atomic, async, elastic-reshard-on-load."""
+from repro.checkpoint.manager import CheckpointManager, load_pytree, save_pytree
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]

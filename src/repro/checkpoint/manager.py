@@ -1,0 +1,133 @@
+"""Step-atomic, async checkpointing with elastic re-shard on restore.
+
+Layout:  <dir>/step_<n>/  arrays.npz + manifest.json ;  commit is a
+rename of a ``.tmp`` directory, so a checkpoint either exists completely
+or not at all (a killed writer can never leave a half checkpoint that a
+restart would load).  ``save_async`` snapshots device arrays to host
+(blocking only for the device->host copy) and writes in a background
+thread — the training loop overlaps the serialization with subsequent
+steps, which is the paper's preempt-to-checkpoint primitive made cheap.
+
+Restore is mesh-agnostic: arrays land on host first, then ``device_put``
+against the CURRENT mesh/sharding — the elastic re-mesh path (grow or
+shrink DP width after the resource shaper resizes the job).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name.startswith(("bfloat", "float8", "float4")):
+            # ml_dtypes (bfloat16, fp8) are not npz-serializable; store
+            # as f32 (lossless upcast) — restore casts back to the
+            # target leaf dtype
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save_pytree(tree, directory: str) -> None:
+    tmp = directory + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    treedef = jax.tree_util.tree_structure(tree)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"treedef": str(treedef),
+                   "keys": sorted(flat.keys())}, f)
+    if os.path.exists(directory):
+        shutil.rmtree(directory)
+    os.rename(tmp, directory)      # atomic commit
+
+
+def load_pytree(tree_like, directory: str, shardings=None):
+    """Restore into the structure of ``tree_like``; optionally place
+    each leaf with the given sharding (elastic re-mesh)."""
+    with np.load(os.path.join(directory, "arrays.npz")) as z:
+        flat = jax.tree_util.tree_flatten_with_path(tree_like)[0]
+        leaves = []
+        for path, leaf in flat:
+            key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            arr = z[key]
+            leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype")
+                          else arr)
+    treedef = jax.tree_util.tree_structure(tree_like)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree) -> None:
+        save_pytree(tree, self._step_dir(step))
+        self._gc()
+
+    def save_async(self, step: int, tree) -> None:
+        """Device->host snapshot now; disk write in the background."""
+        self.wait()
+        host = jax.tree.map(np.asarray, tree)   # snapshot (blocks on d2h)
+
+        def work():
+            save_pytree(host, self._step_dir(step))
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, tree_like, step: int | None = None, shardings=None):
+        step = step if step is not None else self.latest()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return load_pytree(tree_like, self._step_dir(step), shardings), step
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

@@ -1,0 +1,3 @@
+"""One config module per assigned architecture (+ the paper's own sim
+config).  Exact dimensions from the assignment table; source tags in
+each module docstring."""

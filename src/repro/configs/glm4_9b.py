@@ -1,0 +1,14 @@
+"""glm4-9b [dense] — RoPE, aggressive GQA (kv=2). [hf:THUDM/glm-4-9b; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="glm4-9b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv=2,
+    d_ff=13696,
+    vocab=151552,
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,18 @@
+"""granite-moe-1b-a400m [moe] — 32 experts, top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv=8,
+    d_ff=0,
+    vocab=49155,
+    n_experts=32,
+    top_k=8,
+    expert_ff=512,
+    rope_theta=10_000.0,
+)

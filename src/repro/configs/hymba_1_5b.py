@@ -1,0 +1,20 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads, sliding
+windows with periodic global layers, SSM state 16. [arXiv:2411.13676; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab=32001,
+    ssm_state=16,
+    conv_kernel=4,
+    window=1024,             # sliding-window attention
+    global_every=16,         # layers 0 and 16 attend globally
+    rope_theta=10_000.0,
+)

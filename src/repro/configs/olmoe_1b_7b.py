@@ -1,0 +1,18 @@
+"""olmoe-1b-7b [moe] — 64 experts, top-8, no dense FFN.
+[arXiv:2409.02060; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv=16,
+    d_ff=0,                  # MoE replaces the dense FFN entirely
+    vocab=50304,
+    n_experts=64,
+    top_k=8,
+    expert_ff=1024,
+    rope_theta=10_000.0,
+)

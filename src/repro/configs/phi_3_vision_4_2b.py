@@ -1,0 +1,16 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini backbone + CLIP frontend (stub).
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv=32,
+    d_ff=8192,
+    vocab=32064,
+    n_img_tokens=256,        # stub CLIP frontend: precomputed patch embeds
+    rope_theta=10_000.0,
+)

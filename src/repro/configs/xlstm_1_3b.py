@@ -1,0 +1,15 @@
+"""xlstm-1.3b [ssm] — sLSTM + mLSTM blocks, recurrent O(1) decode state.
+[arXiv:2405.04517; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,               # mLSTM heads
+    n_kv=4,
+    d_ff=0,                  # blocks carry their own up/down projections
+    vocab=50304,
+    slstm_every=8,           # 6 groups of 7 mLSTM + 1 sLSTM
+)

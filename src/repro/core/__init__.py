@@ -1,0 +1,8 @@
+# The paper's primary contribution: data-driven dynamic resource
+# allocation = utilization forecasting (core.forecast) + resource
+# shaping with pessimistic preemption (core.shaper) + monitoring
+# (core.monitor).  All decision math is pure JAX and jit/vmap-batched.
+from repro.core import forecast, shaper
+from repro.core.monitor import Monitor
+
+__all__ = ["forecast", "shaper", "Monitor"]

@@ -1,0 +1,65 @@
+"""Forecaster protocol — the paper's §3.1 utilization-forecasting module.
+
+Every forecaster consumes a fixed-length window of past observations of a
+single resource time series (CPU or memory of one application component,
+sampled once per monitoring tick) and produces a ``Forecast``: the k-step
+ahead predictive mean together with a *variance* that quantifies the
+uncertainty of the prediction.  The variance is what the resource shaper's
+safe-guard buffer (Eq. 9) consumes — it is a first-class output, not a
+diagnostic.
+
+All forecasters are pure-JAX and batchable with ``vmap`` over thousands of
+component series, which is how the fleet-scale deployment runs them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Forecast:
+    """k-step-ahead predictive distribution for one series.
+
+    mean, var have shape ``(horizon,)``; ``var`` is the *predictive*
+    variance (not a parameter confidence interval — see paper §3.1.1 for
+    why the distinction matters).
+    """
+
+    mean: Array
+    var: Array
+
+    @property
+    def upper(self) -> Array:
+        """One-sigma upper band — what a K2=1 safeguard would add."""
+        return self.mean + jnp.sqrt(jnp.maximum(self.var, 0.0))
+
+
+class Forecaster(Protocol):
+    """A forecaster maps an observation window to a Forecast.
+
+    ``window`` is shape ``(T,)`` float32 — the most recent T observations,
+    oldest first.  ``valid`` is an optional same-shape boolean mask for
+    series younger than the window (the grace period of §5 means shapers
+    only act once enough points exist, but forecasters must not NaN on
+    short histories).
+    """
+
+    def forecast(self, window: Array, horizon: int, *,
+                 valid: Array | None = None) -> Forecast:
+        ...
+
+
+def batched(forecast_fn, windows: Array, horizon: int,
+            valid: Array | None = None) -> Forecast:
+    """vmap a single-series forecast fn over (B, T) windows."""
+    if valid is None:
+        valid = jnp.ones(windows.shape, dtype=bool)
+    fn = lambda w, v: forecast_fn(w, horizon, valid=v)
+    return jax.vmap(fn)(windows, valid)

@@ -1,0 +1,40 @@
+"""Oracle forecaster — perfect information about future utilization.
+
+The paper's Fig. 3 isolates the value of the *shaping mechanism* from
+the quality of the *predictor* by plugging in an oracle.  The simulator
+hands the oracle the true future slice of each component's utilization
+series; the oracle returns it with zero variance, so the safeguard
+buffer collapses to its static term K1*R.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.forecast.base import Forecast
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OracleForecaster:
+    """Returns the supplied future truth, variance = 0."""
+
+    def forecast_from_future(self, future: Array) -> Forecast:
+        future = jnp.asarray(future, jnp.float32)
+        return Forecast(mean=future, var=jnp.zeros_like(future))
+
+    # Forecaster-protocol shim: with no future supplied, degrade to
+    # persistence (used only by API-compat tests).
+    def forecast(self, window: Array, horizon: int, *,
+                 valid: Array | None = None) -> Forecast:
+        last = jnp.asarray(window)[-1]
+        mean = jnp.full((horizon,), last, jnp.float32)
+        return Forecast(mean=mean, var=jnp.zeros_like(mean))
+
+    def forecast_batch(self, windows: Array, horizon: int, *,
+                       valid: Array | None = None) -> Forecast:
+        fn = lambda w: self.forecast(w, horizon)
+        return jax.vmap(fn)(windows)

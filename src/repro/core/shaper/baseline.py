@@ -1,0 +1,34 @@
+"""Baseline policy: allocation == reservation, never adjusted (paper §4.2).
+
+The reservation-centric approach of Mesos/YARN as implemented in the
+Omega simulator: the only "shaping" is the identity.  The caller passes
+reservations in the demand fields of the ShapeProblem.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.shaper.pessimistic import ShapeDecision, ShapeProblem
+
+
+@jax.jit
+def baseline_shape(p: ShapeProblem) -> ShapeDecision:
+    A, C = p.comp_exists.shape
+    H = p.host_cpu.shape[0]
+    live = p.comp_exists & p.app_exists[:, None]
+    alloc_cpu = jnp.where(live, p.comp_cpu, 0.0)
+    alloc_mem = jnp.where(live, p.comp_mem, 0.0)
+    flat_host = p.comp_host.reshape(-1)
+    used_cpu = jax.ops.segment_sum(alloc_cpu.reshape(-1), flat_host,
+                                   num_segments=H)
+    used_mem = jax.ops.segment_sum(alloc_mem.reshape(-1), flat_host,
+                                   num_segments=H)
+    return ShapeDecision(
+        kill_app=jnp.zeros((A,), bool),
+        kill_comp=jnp.zeros((A, C), bool),
+        alloc_cpu=alloc_cpu,
+        alloc_mem=alloc_mem,
+        cpu_free=p.host_cpu - used_cpu,
+        mem_free=p.host_mem - used_mem,
+    )

@@ -1,0 +1,83 @@
+"""Optimistic reclamation policy (Borg/Omega-style — paper §3.2, §4.2).
+
+Resources are redeemed "without taking explicit actions to manage the
+consequences": every component is resized to its shaped demand with no
+coordination.  Conflicts are resolved after the fact, in the manner of
+optimistic concurrency control: "when two applications compete for
+resources and there are none left, the system will let one of the two
+fail" (paper §4.2).  Concretely, for every host whose total demand
+exceeds capacity, whole applications are failed — largest resident
+demand first, with no elastic-first ordering, no priority ordering and
+no partial preemption — until the host fits.  These kills are the
+*uncontrolled application failures* measured at 37.67% in Fig. 3.
+
+Implemented as a bounded ``lax.while_loop`` so the policy stays a single
+jitted call like its pessimistic counterpart.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.shaper.pessimistic import ShapeDecision, ShapeProblem
+
+
+@jax.jit
+def optimistic_shape(p: ShapeProblem) -> ShapeDecision:
+    A, C = p.comp_exists.shape
+    H = p.host_cpu.shape[0]
+    live0 = p.comp_exists & p.app_exists[:, None]
+    flat_host = p.comp_host.reshape(-1)
+
+    def by_host(x):     # (A, C) -> (H,)
+        return jax.ops.segment_sum(x.reshape(-1), flat_host, num_segments=H)
+
+    # per-app, per-host demand footprint: (A, H)
+    app_cpu_h = jax.vmap(lambda cpu, host, lv: jax.ops.segment_sum(
+        jnp.where(lv, cpu, 0.0), host, num_segments=H))(
+        p.comp_cpu, p.comp_host, live0)
+    app_mem_h = jax.vmap(lambda mem, host, lv: jax.ops.segment_sum(
+        jnp.where(lv, mem, 0.0), host, num_segments=H))(
+        p.comp_mem, p.comp_host, live0)
+
+    def cond(state):
+        kill, cpu_h, mem_h = state
+        return jnp.any((cpu_h > p.host_cpu + 1e-6)
+                       | (mem_h > p.host_mem + 1e-6))
+
+    # "unpredictable" OS-style victim choice: a fixed pseudo-random
+    # priority per app (hash of its index), not size- or age-aware
+    rand_prio = ((jnp.arange(A, dtype=jnp.uint32) * jnp.uint32(2654435761))
+                 >> 8).astype(jnp.float32)
+
+    def body(state):
+        kill, cpu_h, mem_h = state
+        # the most-overcommitted host (memory-first, the finite resource)
+        over_mem = mem_h - p.host_mem
+        over_cpu = cpu_h - p.host_cpu
+        h = jnp.argmax(jnp.maximum(over_mem, over_cpu * 1e-3))
+        # fail a pseudo-random app among those resident on that host
+        resident = (app_mem_h[:, h] + app_cpu_h[:, h]) > 0
+        score = jnp.where(kill | ~resident, -jnp.inf, rand_prio)
+        victim = jnp.argmax(score)
+        kill = kill.at[victim].set(True)
+        cpu_h = cpu_h - app_cpu_h[victim]
+        mem_h = mem_h - app_mem_h[victim]
+        return kill, cpu_h, mem_h
+
+    kill0 = ~p.app_exists
+    state = (kill0, app_cpu_h.sum(0), app_mem_h.sum(0))
+    kill, cpu_h, mem_h = jax.lax.while_loop(cond, body, state)
+    kill_app = kill & p.app_exists
+
+    live = live0 & ~kill_app[:, None]
+    alloc_cpu = jnp.where(live, p.comp_cpu, 0.0)
+    alloc_mem = jnp.where(live, p.comp_mem, 0.0)
+    return ShapeDecision(
+        kill_app=kill_app,
+        kill_comp=jnp.zeros((A, C), bool),
+        alloc_cpu=alloc_cpu,
+        alloc_mem=alloc_mem,
+        cpu_free=p.host_cpu - by_host(alloc_cpu),
+        mem_free=p.host_mem - by_host(alloc_mem),
+    )

@@ -1,0 +1,135 @@
+"""Pessimistic preemption policy — paper Algorithm 1, in JAX.
+
+Greedy pass over running applications in scheduler-policy order:
+
+  * an application's CORE components are fitted first, host by host; if
+    any host would go negative the whole application is marked for FULL
+    preemption (paper lines 11-21, 34-36);
+  * surviving applications then fit their ELASTIC components one at a
+    time, oldest-first (sorted by timeAlive, line 25) — a component that
+    does not fit is PARTIALLY preempted on its own (lines 26-33, 37-38);
+  * every surviving component is resized to its shaped demand
+    (forecast peak + beta, lines 39-41).
+
+Faithfulness notes: core checks use ``< 0`` and elastic checks ``<= 0``
+exactly as in the listing; beta is already folded into the demands by
+the caller (the listing subtracts ``futureX - beta`` — we precompute
+``demand = clip(forecast + beta, 0, request)`` via safeguard.shaped_demand).
+
+The whole policy is a ``lax.scan`` over the (padded, fixed-size) app
+table with an inner scan over the component table, so one jitted call
+shapes the entire cluster — this is what lets the live framework run the
+policy every monitoring tick for thousands of nodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShapeProblem:
+    """Fixed-size cluster state handed to a shaping policy.
+
+    A = max apps, C = max components per app, H = hosts.
+    Demands are the shaped targets (forecast + beta) per component.
+    """
+
+    host_cpu: Array          # (H,) capacity
+    host_mem: Array          # (H,)
+    app_exists: Array        # (A,) bool
+    app_order: Array         # (A,) int — processing order (policy-sorted),
+                             #   entries are app indices; padded with -1
+    comp_exists: Array       # (A, C) bool
+    comp_core: Array         # (A, C) bool
+    comp_host: Array         # (A, C) int32 host index (0 if absent)
+    comp_cpu: Array          # (A, C) shaped cpu demand
+    comp_mem: Array          # (A, C) shaped mem demand
+    comp_alive: Array        # (A, C) seconds alive (elastic sort key)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShapeDecision:
+    kill_app: Array          # (A,) bool — full preemption
+    kill_comp: Array         # (A, C) bool — partial (elastic) preemption
+    alloc_cpu: Array         # (A, C) granted allocation (0 for killed)
+    alloc_mem: Array         # (A, C)
+    cpu_free: Array          # (H,) remaining after allocation
+    mem_free: Array          # (H,)
+
+
+def _seg_sum(vals: Array, seg: Array, num: int) -> Array:
+    return jax.ops.segment_sum(vals, seg, num_segments=num)
+
+
+@jax.jit
+def pessimistic_shape(p: ShapeProblem) -> ShapeDecision:
+    A, C = p.comp_exists.shape
+    H = p.host_cpu.shape[0]
+
+    # elastic processing order per app: oldest (largest timeAlive) first,
+    # so the newest components are the ones that hit exhausted capacity.
+    alive_key = jnp.where(p.comp_exists & ~p.comp_core,
+                          p.comp_alive, -jnp.inf)
+    elastic_order = jnp.argsort(-alive_key, axis=1)          # (A, C)
+
+    def app_step(carry, a):
+        cpu_free, mem_free = carry
+        valid = (a >= 0) & p.app_exists[jnp.maximum(a, 0)]
+        a_ = jnp.maximum(a, 0)
+        exists = p.comp_exists[a_]
+        core = exists & p.comp_core[a_]
+        host = p.comp_host[a_]
+
+        # ---- core components (lines 11-19): aggregate per-host demand ----
+        core_cpu = _seg_sum(jnp.where(core, p.comp_cpu[a_], 0.0), host, H)
+        core_mem = _seg_sum(jnp.where(core, p.comp_mem[a_], 0.0), host, H)
+        trial_cpu = cpu_free - core_cpu
+        trial_mem = mem_free - core_mem
+        remove = valid & (jnp.any(trial_cpu < 0.0) | jnp.any(trial_mem < 0.0))
+        commit_core = valid & ~remove
+        cpu_free = jnp.where(commit_core, trial_cpu, cpu_free)
+        mem_free = jnp.where(commit_core, trial_mem, mem_free)
+
+        # ---- elastic components (lines 25-33): sequential oldest-first ----
+        def comp_step(inner, c_pos):
+            cf, mf, kill_row = inner
+            c = elastic_order[a_, c_pos]
+            is_el = commit_core & exists[c] & ~p.comp_core[a_, c]
+            h = host[c]
+            tc = cf[h] - p.comp_cpu[a_, c]
+            tm = mf[h] - p.comp_mem[a_, c]
+            kill_c = is_el & ((tc <= 0.0) | (tm <= 0.0))
+            commit = is_el & ~kill_c
+            cf = cf.at[h].add(jnp.where(commit, -p.comp_cpu[a_, c], 0.0))
+            mf = mf.at[h].add(jnp.where(commit, -p.comp_mem[a_, c], 0.0))
+            kill_row = kill_row.at[c].set(kill_c)
+            return (cf, mf, kill_row), None
+
+        (cpu_free, mem_free, kill_row), _ = jax.lax.scan(
+            comp_step, (cpu_free, mem_free, jnp.zeros((C,), bool)),
+            jnp.arange(C))
+
+        out = (a_, remove, kill_row)
+        return (cpu_free, mem_free), out
+
+    (cpu_free, mem_free), (idxs, removes, kill_rows) = jax.lax.scan(
+        app_step, (p.host_cpu, p.host_mem), p.app_order)
+
+    # scatter scan outputs (ordered by app_order) back to app-index order
+    kill_app = jnp.zeros((A,), bool).at[idxs].max(removes)
+    kill_comp = jnp.zeros((A, C), bool).at[idxs].max(kill_rows)
+
+    survive = (p.comp_exists & p.app_exists[:, None]
+               & ~kill_app[:, None] & ~kill_comp)
+    alloc_cpu = jnp.where(survive, p.comp_cpu, 0.0)
+    alloc_mem = jnp.where(survive, p.comp_mem, 0.0)
+    return ShapeDecision(kill_app=kill_app, kill_comp=kill_comp,
+                         alloc_cpu=alloc_cpu, alloc_mem=alloc_mem,
+                         cpu_free=cpu_free, mem_free=mem_free)

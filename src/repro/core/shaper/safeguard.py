@@ -1,0 +1,49 @@
+"""Safe-guard buffer (paper Eq. 9):  beta = K1 * R_A  +  K2 * V_A.
+
+K1 scales the *static* term — a minimum allocation floor expressed as a
+fraction of the original reservation R (K1 = 1.0 degenerates to the
+baseline, K1 = 0 removes the floor).  K2 scales the *dynamic* term — the
+predictive uncertainty reported by the forecaster.  The paper sweeps
+K2 in {0, 1, 2, 3}, "bands around the mean of the predictive Gaussian
+distribution, according to the three-sigma rule": i.e. the dynamic term
+is K2 predictive *standard deviations* (V in Eq. 9 is the forecaster's
+variance estimate; sigma bands are its actionable form).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SafeguardConfig:
+    k1: float = 0.05   # paper's best: 5% static floor
+    k2: float = 3.0    # paper's best: 3-sigma dynamic band
+
+
+def beta(request: Array, var: Array, cfg: SafeguardConfig) -> Array:
+    """Buffer added on top of the predicted peak utilization.
+
+    request: original reservation (same units as the resource);
+    var: forecaster predictive variance (same units squared).
+    Broadcasts over any shape (per-component, per-resource).
+    """
+    sigma = jnp.sqrt(jnp.maximum(var, 0.0))
+    return cfg.k1 * request + cfg.k2 * sigma
+
+
+def shaped_demand(pred_peak: Array, request: Array, var: Array,
+                  cfg: SafeguardConfig) -> Array:
+    """Allocation target: forecast peak + beta, clamped into (0, request].
+
+    The clamp to the reservation is the paper's implicit contract: the
+    shaper only *redeems* slack, it never grants more than the tenant
+    reserved; the floor keeps a crumb allocated so idle components stay
+    alive (K1 = 0 with a confident predictor would allocate ~0).
+    """
+    b = beta(request, var, cfg)
+    return jnp.clip(pred_peak + b, 0.0, request)

@@ -1,0 +1,4 @@
+"""Data pipeline: deterministic synthetic token streams, host-sharded."""
+from repro.data.pipeline import DataConfig, SyntheticStream, make_batch_specs
+
+__all__ = ["DataConfig", "SyntheticStream", "make_batch_specs"]

@@ -1,0 +1,5 @@
+"""Distribution substrate: sharding rules, elastic re-mesh, fault
+tolerance, gradient compression, pipeline parallelism."""
+from repro.distributed import sharding
+
+__all__ = ["sharding"]

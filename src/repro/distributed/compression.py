@@ -1,0 +1,57 @@
+"""Gradient compression: int8 quantized all-reduce with error feedback.
+
+For the inter-pod hop of the hierarchical DP reduction: DCI bandwidth is
+the scarcest link in a multi-pod job, and gradients tolerate 8-bit
+stochastic-rounding-free quantization when the residual is fed back
+(error-feedback keeps the compression bias out of the optimizer's
+long-run trajectory; cf. 1-bit SGD / EF-SGD lineage).
+
+``compressed_psum`` is designed for use inside ``shard_map`` over the
+``pod`` axis: quantize (per-tensor scale) -> psum in int32 -> dequant;
+the residual state is returned for the next step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def quantize_int8(x: Array) -> tuple[Array, Array]:
+    """Per-tensor symmetric int8 quantization -> (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(x: Array, residual: Array) -> tuple[Array, Array, Array]:
+    """Error-feedback compression: returns (q, scale, new_residual)."""
+    target = x.astype(jnp.float32) + residual
+    q, scale = quantize_int8(target)
+    new_residual = target - dequantize_int8(q, scale)
+    return q, scale, new_residual
+
+
+def compressed_psum(x: Array, residual: Array, axis_name: str
+                    ) -> tuple[Array, Array]:
+    """int8 EF all-reduce over ``axis_name`` (inside shard_map).
+
+    The int8 payload is summed in int32 (no overflow for <= 2^23
+    participants), scales are meaned; the result is the dequantized
+    mean-of-quantized gradient."""
+    q, scale, new_residual = ef_compress(x, residual)
+    n = jax.lax.psum(1, axis_name)
+    qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    ssum = jax.lax.psum(scale, axis_name)
+    out = qsum.astype(jnp.float32) * (ssum / n) / n
+    return out.astype(x.dtype), new_residual
+
+
+def init_residuals(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)

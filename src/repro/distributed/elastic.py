@@ -1,0 +1,70 @@
+"""Elastic re-mesh: grow/shrink the data-parallel width of a running job.
+
+This is the TPU materialization of the paper's *elastic components*: a
+training job's DP replicas beyond the first are elastic — the resource
+shaper can revoke them (shrink) or grant them back (grow) and the job
+continues from its last checkpoint on a different mesh.
+
+Mechanics: checkpoints are mesh-agnostic (host numpy); ``reshard`` takes
+a host pytree + the NEW mesh and places every leaf with the param specs
+recomputed against that mesh.  Shrinking DP only changes the batch
+sharding; shrinking/growng the model axis re-partitions weights — both
+are the same device_put.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed import sharding as Sh
+
+
+def to_host(tree):
+    return jax.tree.map(np.asarray, tree)
+
+
+def reshard(host_tree, mesh: Mesh):
+    """Place a host pytree onto ``mesh`` using the standard param rules."""
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                             Sh.param_specs(host_tree, mesh))
+    return jax.tree.map(jax.device_put, host_tree, shardings)
+
+
+@dataclasses.dataclass
+class ElasticDecision:
+    """What the shaper decided for this job at the last tick."""
+    dp_width: int                 # granted data-parallel replicas
+    preempt: bool = False         # full preemption (checkpoint + vacate)
+
+
+class ElasticController:
+    """Bridges the resource shaper's per-job allocation to mesh geometry.
+
+    The job's components: 1 core replica (model-parallel slice) + up to
+    ``max_dp - 1`` elastic replicas.  The shaper's granted allocation is
+    quantized to a DP width; on change the driver checkpoints, rebuilds
+    the mesh and reshards (see launch/train.py)."""
+
+    def __init__(self, min_dp: int = 1, max_dp: int = 16):
+        self.min_dp = min_dp
+        self.max_dp = max_dp
+        self.current = max_dp
+
+    def decide(self, granted_fraction: float) -> ElasticDecision:
+        """granted_fraction: granted / reserved resources for the job."""
+        if granted_fraction <= 0.0:
+            return ElasticDecision(dp_width=0, preempt=True)
+        width = max(self.min_dp,
+                    min(self.max_dp, round(granted_fraction * self.max_dp)))
+        return ElasticDecision(dp_width=width)
+
+    def apply(self, decision: ElasticDecision) -> bool:
+        """Returns True if the mesh geometry changed."""
+        if decision.preempt:
+            return True
+        changed = decision.dp_width != self.current
+        self.current = decision.dp_width
+        return changed

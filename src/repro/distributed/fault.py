@@ -1,0 +1,88 @@
+"""Fault tolerance: heartbeats, straggler detection, restart ledger.
+
+These are the host-side mechanisms the paper's architecture needs on a
+TPU cluster:
+
+* ``HeartbeatTracker`` — per-host liveness with a deadline; a missed
+  heartbeat marks the host failed, which the training driver maps to
+  preempt-to-checkpoint + elastic re-mesh (DP width shrinks by the lost
+  replica, exactly the paper's "elastic component" removal).
+* ``StragglerDetector`` — per-host step-time EWMA; hosts slower than
+  ``threshold x`` median are flagged.  Flags feed the utilization
+  monitor (a straggling host shows up as an anomalous utilization
+  series, which raises the GP's predictive variance, which widens the
+  safeguard buffer — the paper's uncertainty channel doing double duty).
+* ``RestartLedger`` — append-only JSONL of failure/preemption/restart
+  events; on restart the driver replays it to decide the resume step and
+  requeue position (the paper: resubmission keeps original priority).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+
+@dataclasses.dataclass
+class HeartbeatTracker:
+    deadline_s: float = 30.0
+    _last: dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def beat(self, host: int, now: float | None = None) -> None:
+        self._last[host] = now if now is not None else time.time()
+
+    def dead_hosts(self, now: float | None = None) -> list[int]:
+        now = now if now is not None else time.time()
+        return [h for h, t in self._last.items()
+                if now - t > self.deadline_s]
+
+    def alive(self, now: float | None = None) -> list[int]:
+        now = now if now is not None else time.time()
+        return [h for h, t in self._last.items()
+                if now - t <= self.deadline_s]
+
+
+class StragglerDetector:
+    def __init__(self, alpha: float = 0.2, threshold: float = 1.5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.ewma: dict[int, float] = {}
+
+    def record(self, host: int, step_time: float) -> None:
+        prev = self.ewma.get(host, step_time)
+        self.ewma[host] = (1 - self.alpha) * prev + self.alpha * step_time
+
+    def stragglers(self) -> list[int]:
+        if len(self.ewma) < 2:
+            return []
+        med = sorted(self.ewma.values())[len(self.ewma) // 2]
+        return [h for h, t in self.ewma.items()
+                if t > self.threshold * med]
+
+
+class RestartLedger:
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    def record(self, kind: str, **fields) -> None:
+        entry = dict(kind=kind, ts=time.time(), **fields)
+        with open(self.path, "a") as f:
+            f.write(json.dumps(entry) + "\n")
+
+    def replay(self) -> list[dict]:
+        if not os.path.exists(self.path):
+            return []
+        out = []
+        with open(self.path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    out.append(json.loads(line))
+        return out
+
+    def last_committed_step(self) -> int | None:
+        steps = [e["step"] for e in self.replay()
+                 if e["kind"] == "checkpoint_committed"]
+        return max(steps) if steps else None

@@ -1,0 +1,230 @@
+"""Logical sharding rules: param/optimizer/batch/cache PartitionSpecs.
+
+Megatron-style tensor parallelism over the ``model`` axis composed with
+(hierarchical) data parallelism over ``("pod", "data")``:
+
+  * column-parallel (output dim on ``model``): q/k/v projections, MLP
+    gate/up, SSM in-projections, xLSTM up-projections;
+  * row-parallel (input dim on ``model``): attention output, MLP down,
+    SSM/xLSTM down-projections — GSPMD closes each block with one
+    reduce-scatter/all-gather pair;
+  * expert-parallel: MoE expert stacks shard their EXPERT dim over
+    ``model`` (token exchange lowers to all-to-alls);
+  * vocab-parallel embedding + lm_head;
+  * optimizer moments inherit the param spec (ZeRO-3-like for the TP
+    dims for free; DP-replicated otherwise).
+
+Rules are path-name based so they survive arbitrary stacking: a leaf's
+spec is (None,)*(ndim - len(rule)) + rule, which handles scan-stacked
+blocks (L, ...) and xLSTM's (G, K, ...) nesting uniformly.
+
+Divisibility is checked against the actual mesh: a dim that does not
+divide falls back to replication (e.g. glm4's 2 KV heads on a 16-way
+model axis — its decode cache shards the SEQUENCE dim instead, which is
+exactly what makes that cell collective-bound; see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+MODEL = "model"
+# data axes present in the mesh are discovered at call time
+CANDIDATE_DATA_AXES = ("pod", "data")
+
+# name -> trailing-dims rule (applied to the last len(rule) dims)
+_COLUMN = (None, MODEL)
+_ROW = (MODEL, None)
+_RULES: dict[str, tuple] = {
+    # embeddings
+    "embed": (MODEL, None), "tok_embed": (MODEL, None),
+    "lm_head": _COLUMN,
+    # attention
+    "wq": _COLUMN, "wk": _COLUMN, "wv": _COLUMN, "wo": _ROW,
+    # dense MLP
+    "gate": _COLUMN, "up": _COLUMN, "down": _ROW,
+    # ssm
+    "in_proj": _COLUMN, "out_proj": _ROW, "conv": (None, MODEL),
+    "w_dt": _COLUMN,
+    # xlstm
+    "w_up": _COLUMN, "w_z": _COLUMN, "w_in": _COLUMN,
+    "w_down": _ROW, "w_out": _ROW,
+}
+# MoE expert tensors: (..., E, d, ff) / (..., E, ff, d)
+_EXPERT_RULE = (MODEL, None, None)
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in CANDIDATE_DATA_AXES if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _leaf_spec(path, leaf, mesh: Mesh) -> P:
+    names = [p.key for p in path if hasattr(p, "key")]
+    name = names[-1] if names else ""
+    in_moe = "moe" in names
+    msize = mesh.shape[MODEL]
+
+    rule: tuple | None = None
+    if in_moe and name in ("gate", "up", "down") and leaf.ndim >= 3:
+        rule = _EXPERT_RULE
+    elif name in _RULES and leaf.ndim >= len(_RULES[name]):
+        rule = _RULES[name]
+
+    if rule is None:
+        return P()
+    # divisibility check on each sharded dim
+    full = (None,) * (leaf.ndim - len(rule)) + rule
+    ok = []
+    for dim, ax in enumerate(full):
+        if ax is None:
+            ok.append(None)
+        elif leaf.shape[dim] % msize == 0:
+            ok.append(ax)
+        else:
+            ok.append(None)
+    return P(*ok)
+
+
+def param_specs(params, mesh: Mesh, overrides: dict | None = None):
+    """Pytree of PartitionSpec mirroring ``params``.
+
+    ``overrides``: {leaf_name: trailing-rule or P()} — per-arch perf
+    variants (e.g. the ssm family replicates its block weights: TP
+    all-reduces of mLSTM activations cost more than the weights save)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)
+
+    def spec(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        if overrides and name in overrides:
+            return P()
+        return _leaf_spec(path, leaf, mesh)
+
+    specs = [spec(path, leaf) for path, leaf in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh))
+
+
+def zero_shard(spec: P, leaf, mesh: Mesh) -> P:
+    """ZeRO-style optimizer-state sharding: give an (otherwise
+    replicated or partially sharded) moment tensor one extra data-axis
+    shard on its first large divisible dim."""
+    daxes = data_axes(mesh)
+    dsize = axis_size(mesh, daxes)
+    cur = tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec)))
+    for dim in range(leaf.ndim):
+        if cur[dim] is None and leaf.shape[dim] % dsize == 0 \
+                and leaf.shape[dim] >= dsize:
+            new = list(cur)
+            new[dim] = daxes
+            return P(*new)
+    return P(*cur)
+
+
+def opt_specs(opt_state, params, mesh: Mesh, *, zero: bool = False,
+              overrides: dict | None = None):
+    """Optimizer moments inherit the param spec; counters replicate.
+    ``zero=True`` additionally shards moments over the data axis
+    (ZeRO-1) — fp32 mu/nu dominate HBM for replicated-weight archs."""
+    pspecs = param_specs(params, mesh, overrides)
+    if zero:
+        mspecs = jax.tree.map(
+            lambda s, l: zero_shard(s, l, mesh), pspecs, params)
+    else:
+        mspecs = pspecs
+    return {"mu": mspecs, "nu": mspecs, "step": P()}
+
+
+def batch_spec(mesh: Mesh, ndim: int = 2) -> P:
+    """(B, ...) host batch: batch dim over all data axes."""
+    return P(data_axes(mesh), *([None] * (ndim - 1)))
+
+
+def _maybe(axes, size: int, mesh: Mesh):
+    return axes if axes and size % axis_size(mesh, axes) == 0 else None
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, mesh: Mesh,
+                *, kv_fallback: str = "seq"):
+    """PartitionSpecs for the stacked decode caches of ``init_caches``.
+
+    Priority: shard batch over data; shard KV heads over model when they
+    divide (pad_kv_heads replication makes this the common case).  When
+    heads do not divide, ``kv_fallback`` picks the layout:
+      * "seq"       — shard the cache SEQUENCE over model (ring-style;
+                      minimizes HBM but pays attention-time collectives
+                      every layer — the §Perf BASELINE for glm4/granite);
+      * "replicate" — keep the cache whole per model shard (costs HBM,
+                      zero attention collectives — §Perf optimized).
+    """
+    daxes = data_axes(mesh)
+    b_ax = _maybe(daxes, batch, mesh)
+    if cfg.family == "ssm":
+        from repro.models import xlstm as X
+        dh = X.PROJ * cfg.d_model // cfg.n_heads
+        m_ok = dh % mesh.shape[MODEL] == 0
+        return {
+            "mlstm": {
+                "C": P(None, None, b_ax, None, MODEL if m_ok else None, None),
+                "n": P(None, None, b_ax, None, None),
+                "m": P(None, None, b_ax, None),
+            },
+            **({"slstm": {
+                "c": P(None, b_ax, MODEL if cfg.d_model % mesh.shape[MODEL] == 0 else None),
+                "n": P(None, b_ax, None),
+                "m": P(None, b_ax, None),
+                "h": P(None, b_ax, None),
+            }} if cfg.slstm_every > 0 else {}),
+        }
+    kv_on_model = cfg.kv_heads_eff % mesh.shape[MODEL] == 0
+    seq_on_model = (not kv_on_model and kv_fallback == "seq"
+                    and max_len % mesh.shape[MODEL] == 0)
+    from repro.models.attention import KVCache
+    from repro.models.transformer import LayerCache
+    d_ok = cfg.d_model % mesh.shape[MODEL] == 0
+
+    if not cfg.scan_layers:
+        # per-layer (unstacked) serving caches: same dims minus the
+        # leading layer axis, one spec per layer
+        kv_spec = P(b_ax, MODEL if kv_on_model else None,
+                    MODEL if seq_on_model else None, None)
+        kv = KVCache(k=kv_spec, v=kv_spec, length=P())
+        ssm = None
+        if cfg.family == "hybrid":
+            ssm = {"h": P(b_ax, MODEL if d_ok else None, None),
+                   "conv": P(b_ax, None, MODEL if d_ok else None)}
+        return [LayerCache(attn=kv, ssm=ssm)] * cfg.n_layers
+
+    kv_spec = P(None, b_ax,
+                MODEL if kv_on_model else None,
+                MODEL if seq_on_model else None,
+                None)
+    kv = KVCache(k=kv_spec, v=kv_spec, length=P(None))
+    ssm = None
+    if cfg.family == "hybrid":
+        ssm = {"h": P(None, b_ax, MODEL if d_ok else None, None),
+               "conv": P(None, b_ax, None, MODEL if d_ok else None)}
+    return LayerCache(attn=kv, ssm=ssm)
+
+
+def logits_spec(mesh: Mesh) -> P:
+    return P(data_axes(mesh), None, MODEL)

@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# init.  The dry-run (and only the dry-run) runs with 512 placeholder
+# host devices so the production meshes can be built.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:   with mesh:
+                     lowered = jax.jit(step, in_shardings=...).lower(*specs)
+                     compiled = lowered.compile()
+                     memory_analysis / cost_analysis / collective bytes
+
+Proves: the sharding config is coherent (no mismatched specs), the
+program fits (memory analysis), and yields the roofline inputs
+(HLO FLOPs + bytes from cost_analysis; collective bytes parsed from the
+post-SPMD optimized HLO).  Results accumulate in dryrun_results.json —
+re-runs skip completed cells, failures record the error.
+
+Usage:
+  python -m repro.launch.dryrun [--arch A] [--shape S] [--mesh single|multi|both]
+                                [--out PATH] [--smoke] [--force]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SHAPES, eligible, input_specs
+from repro.models import ARCHS, get_config
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum byte sizes of all typed shapes in an HLO result-type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-op byte totals from optimized HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        for op in _COLLECTIVES:
+            # match "= TYPE op(" — result type precedes the opcode
+            idx = line.find(f" {op}(")
+            if idx < 0 or "=" not in line[:idx]:
+                continue
+            lhs = line[line.index("=") + 1:idx]
+            out[op] += _shape_bytes(lhs)
+            out["count"] += 1
+            break
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             smoke: bool = False, variant: str = "default") -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    cell = input_specs(arch, shape_name, mesh, smoke=smoke,
+                       variant=variant)
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    rec: dict = dict(arch=arch, shape=shape_name, mesh=mesh_kind,
+                     kind=cell.kind, ok=True, variant=variant,
+                     t_lower=round(t_lower, 1),
+                     t_compile=round(t_compile, 1), **cell.meta)
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # pragma: no cover - backend dependent
+        rec["memory"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float)) and
+                       ("flops" in k or "bytes" in k or k == "utilization")}
+    except Exception as e:  # pragma: no cover
+        rec["cost"] = {"error": str(e)}
+    try:
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)
+        # loop-aware per-device cost (fixes the while-body-counted-once
+        # convention of cost_analysis — see benchmarks/hlo_analysis.py)
+        import sys
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                        "..", "..", ".."))
+        from benchmarks.hlo_analysis import analyze
+        rec["hlo"] = analyze(hlo)
+    except Exception as e:  # pragma: no cover
+        rec["collectives"] = rec.get("collectives", {"error": str(e)})
+        rec["hlo"] = {"error": str(e)}
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="default",
+                    choices=["default", "opt"])
+    args = ap.parse_args()
+
+    try:
+        with open(args.out) as f:
+            results = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        results = {}
+
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            ok, why = eligible(cfg, shape_name)
+            for mesh_kind in meshes:
+                key = f"{arch}|{shape_name}|{mesh_kind}"
+                if args.variant != "default":
+                    key += f"|{args.variant}"
+                if not ok:
+                    results[key] = dict(arch=arch, shape=shape_name,
+                                        mesh=mesh_kind, skipped=True,
+                                        variant=args.variant, reason=why)
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+                    print(f"SKIP {key}: {why}", flush=True)
+                    n_skip += 1
+                    continue
+                if key in results and results[key].get("ok") and not args.force:
+                    print(f"CACHED {key}", flush=True)
+                    n_ok += 1
+                    continue
+                print(f"RUN  {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, mesh_kind,
+                                   smoke=args.smoke,
+                                   variant=args.variant)
+                    n_ok += 1
+                    cb = rec.get("collectives", {})
+                    print(f"  ok: compile {rec['t_compile']}s, "
+                          f"flops={rec['cost'].get('flops', 0):.3e}, "
+                          f"coll_ops={cb.get('count', '?')}", flush=True)
+                except Exception as e:
+                    rec = dict(arch=arch, shape=shape_name, mesh=mesh_kind,
+                               ok=False, error=f"{type(e).__name__}: {e}",
+                               trace=traceback.format_exc()[-2000:])
+                    print(f"  FAIL: {rec['error']}", flush=True)
+                    n_fail += 1
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_fail} failed",
+          flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before first init).
+
+Topology (TPU v5e pods): a pod is a 16x16 slice (256 chips) meshed as
+(data=16, model=16); multi-pod prepends a ``pod`` axis (DCI-connected),
+and data-parallel reduction becomes hierarchical (reduce-scatter intra-
+pod over ICI, all-reduce across pods, all-gather intra-pod).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Degenerate mesh for CPU tests/examples (1 device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

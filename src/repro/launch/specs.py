@@ -1,0 +1,262 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every dry-run cell.
+
+No device allocation anywhere: parameters, optimizer state and caches
+come from ``jax.eval_shape`` over the real init functions, so the specs
+can never drift from the actual model; inputs are built directly.
+
+A cell = (arch, shape_name, step kind):
+  train_4k    -> train_step(params, opt_state, batch)
+  prefill_32k -> prefill(params, tokens[, img/frames])
+  decode_32k  -> decode_step(params, token, caches)   (cache len = seq)
+  long_500k   -> decode_step at 524288 ctx, batch 1 (sub-quadratic only)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as Sh
+from repro.models import get_config
+from repro.models import transformer as T
+from repro.models import whisper as W
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init
+from repro.serve.engine import decode_step_fn, prefill_fn, whisper_decode_step_fn
+from repro.train import TrainConfig, make_train_step
+
+SHAPES: dict[str, dict] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524_288, batch=1),
+}
+
+
+def apply_variant(cfg: ModelConfig, variant: str, mesh):
+    """Perf-variant config overrides (EXPERIMENTS.md §Perf).
+
+    "default" — the paper-faithful / first-principles baseline;
+    "opt"     — the hillclimbed configuration:
+       * KV-head replication padding to the TP width (cache shards over
+         model; no attention collectives) where n_kv | width | n_heads;
+       * replicate-KV fallback (instead of sequence-sharding) when
+         padding is impossible;
+       * chunkwise-parallel mLSTM (chunk 64) for the ssm family.
+    Returns (cfg, kv_fallback)."""
+    if variant == "default":
+        return cfg, "seq"
+    msize = mesh.shape["model"]
+    changes: dict = {}
+    if (cfg.family != "ssm" and cfg.n_kv % msize != 0
+            and msize % cfg.n_kv == 0 and cfg.n_heads % msize == 0):
+        changes["pad_kv_heads"] = msize
+    if cfg.family == "ssm":
+        changes["mlstm_chunk"] = 64
+        # replicate mLSTM block weights: the (di,di) projections would
+        # contract a model-sharded dim, costing a (B,S,di) fp32
+        # all-reduce per layer — far more than the 2.6GB of weights;
+        # optimizer moments go ZeRO-1 over data to pay for it
+    else:
+        # unrolled serving layers: per-layer donated cache buffers with
+        # static in-place updates (§Perf iteration 4)
+        changes["scan_layers"] = False
+    if changes:
+        cfg = dataclasses.replace(cfg, **changes)
+    return cfg, "replicate"
+
+
+_SSM_OVERRIDES = {"wq": None, "wk": None, "wv": None, "w_up": None,
+                  "w_z": None, "w_down": None, "w_in": None, "w_out": None}
+
+
+def variant_overrides(cfg: ModelConfig, variant: str) -> dict | None:
+    if variant == "opt" and cfg.family == "ssm":
+        return _SSM_OVERRIDES
+    return None
+
+
+def eligible(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention arch: 500k-token decode is "
+                       "quadratic-history + unshardable KV at batch 1 "
+                       "(skip noted in DESIGN.md)")
+    return True, ""
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    kind: str
+    fn: Callable                  # the function to lower
+    args: tuple                   # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    donate: tuple[int, ...]
+    meta: dict[str, Any]
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _shardify(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def _batch_sharding(mesh, batch: int, ndim: int, *,
+                    include_model: bool = False):
+    daxes = Sh.data_axes(mesh)
+    if include_model:
+        # DP-only archs (replicated weights): the model axis would sit
+        # idle — fold it into the batch shard
+        daxes = daxes + (Sh.MODEL,)
+        while daxes and batch % Sh.axis_size(mesh, daxes) != 0:
+            daxes = daxes[1:]   # drop leading axes until divisible
+    if not daxes or batch % Sh.axis_size(mesh, daxes) != 0:
+        daxes = None
+    return NamedSharding(mesh, P(daxes, *([None] * (ndim - 1))))
+
+
+def input_specs(arch: str, shape_name: str, mesh, *,
+                smoke: bool = False, variant: str = "default") -> Cell:
+    cfg = get_config(arch, smoke=smoke)
+    cfg, kv_fallback = apply_variant(cfg, variant, mesh)
+    sh = SHAPES[shape_name]
+    seq, batch = sh["seq"], sh["batch"]
+    if smoke:
+        seq, batch = 64, 4
+    kind = sh["kind"]
+
+    key = jax.random.PRNGKey(0)
+    if cfg.encdec:
+        params = jax.eval_shape(lambda: W.init_whisper(key, cfg))
+    else:
+        params = jax.eval_shape(lambda: T.init_lm(key, cfg))
+    overrides = variant_overrides(cfg, variant)
+    pspecs = Sh.param_specs(params, mesh, overrides)
+    pshard = _shardify(mesh, pspecs)
+
+    meta = dict(seq=seq, batch=batch,
+                n_params=int(sum(x.size for x in jax.tree.leaves(params))),
+                n_active=cfg.n_active_params())
+
+    if kind == "train":
+        opt = jax.eval_shape(lambda: adamw_init(params))
+        ospecs = Sh.opt_specs(None, params, mesh,
+                              zero=(variant == "opt"),
+                              overrides=overrides)
+        oshard = _shardify(mesh, ospecs)
+        if cfg.encdec:
+            dlen = cfg.dec_len
+            batch_t = {
+                "frames": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                               jnp.bfloat16),
+                "dec_tokens": jax.ShapeDtypeStruct((batch, dlen), jnp.int32),
+                "dec_labels": jax.ShapeDtypeStruct((batch, dlen), jnp.int32),
+            }
+            bshard = {"frames": _batch_sharding(mesh, batch, 3),
+                      "dec_tokens": _batch_sharding(mesh, batch, 2),
+                      "dec_labels": _batch_sharding(mesh, batch, 2)}
+        else:
+            dp_only = variant == "opt" and cfg.family == "ssm"
+            batch_t = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+                       "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+            bshard = {"tokens": _batch_sharding(mesh, batch, 2,
+                                                include_model=dp_only),
+                      "labels": _batch_sharding(mesh, batch, 2,
+                                                include_model=dp_only)}
+            if cfg.family == "vlm":
+                batch_t["img_embeds"] = jax.ShapeDtypeStruct(
+                    (batch, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+                bshard["img_embeds"] = _batch_sharding(mesh, batch, 3)
+        tc = TrainConfig(microbatches=1)
+        fn = make_train_step(cfg, tc)
+        return Cell(arch, shape_name, kind, fn,
+                    (params, _sds(opt), batch_t),
+                    (pshard, oshard, bshard), donate=(0, 1), meta=meta)
+
+    if kind == "prefill":
+        if cfg.encdec:
+            frames = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                          jnp.bfloat16)
+
+            def wfn(p, fr):
+                enc = W.encode(p, fr, cfg)
+                toks = jnp.zeros((fr.shape[0], cfg.dec_len), jnp.int32)
+                logits, _ = W.decode(p, toks, enc, cfg)
+                return logits[:, -1]
+
+            return Cell(arch, shape_name, kind, wfn, (params, frames),
+                        (pshard, _batch_sharding(mesh, batch, 3)),
+                        donate=(), meta=meta)
+        toks = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        extra = {}
+        if cfg.family == "vlm":
+            extra["img_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+
+        def pfn(p, tokens, **kw):
+            return prefill_fn(p, cfg, tokens, max_len=seq, **kw)
+
+        shardings = [pshard, _batch_sharding(mesh, batch, 2)]
+        args = [params, toks]
+        if extra:
+            args.append(extra["img_embeds"])
+            shardings.append(_batch_sharding(mesh, batch, 3))
+
+            def pfn(p, tokens, img):  # noqa: F811
+                return prefill_fn(p, cfg, tokens, max_len=seq,
+                                  img_embeds=img)
+
+        return Cell(arch, shape_name, kind, pfn, tuple(args),
+                    tuple(shardings), donate=(), meta=meta)
+
+    # ---- decode -------------------------------------------------------
+    if cfg.encdec:
+        token = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+        enc_out = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                       jnp.bfloat16)
+        caches = jax.eval_shape(
+            lambda: W.init_dec_caches(cfg, batch, cfg.dec_len))
+        daxes = Sh.data_axes(mesh)
+        b_ok = batch % Sh.axis_size(mesh, daxes) == 0
+
+        def _cspec(x):
+            if x.ndim < 2:
+                return P()
+            return P(None, daxes if b_ok else None,
+                     *([None] * (x.ndim - 2)))
+
+        cshard = _shardify(mesh, jax.tree.map(_cspec, caches))
+
+        def dfn(p, tok, enc, ca):
+            return whisper_decode_step_fn(p, cfg, tok, enc, ca)
+
+        return Cell(arch, shape_name, kind, dfn,
+                    (params, token, enc_out, caches),
+                    (pshard, _batch_sharding(mesh, batch, 2),
+                     _batch_sharding(mesh, batch, 3), cshard),
+                    donate=(3,), meta=meta)
+
+    token = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    # cache length seq+16 keeps the seq dim divisible by the model axis
+    # (required by the sequence-sharded KV fallback, e.g. glm4's kv=2)
+    caches = jax.eval_shape(lambda: T.init_caches(cfg, batch, seq + 16))
+    cspecs = Sh.cache_specs(cfg, batch, seq + 16, mesh,
+                            kv_fallback=kv_fallback)
+    cshard = _shardify(mesh, cspecs)
+
+    def dfn(p, tok, ca):
+        return decode_step_fn(p, cfg, tok, ca)
+
+    return Cell(arch, shape_name, kind, dfn, (params, token, caches),
+                (pshard, _batch_sharding(mesh, batch, 2), cshard),
+                donate=(2,), meta=meta)

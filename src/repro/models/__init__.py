@@ -1,0 +1,6 @@
+"""Model zoo: 10 assigned architectures behind one functional API."""
+from repro.models.config import ModelConfig, smoke_config
+from repro.models.registry import ARCHS, get_config, list_archs
+
+__all__ = ["ModelConfig", "smoke_config", "ARCHS", "get_config",
+           "list_archs"]

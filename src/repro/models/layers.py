@@ -1,0 +1,117 @@
+"""Shared neural building blocks: norms, MLPs, embeddings, RoPE.
+
+Functional style: ``init_*`` returns a param pytree, ``apply`` functions
+are pure.  All matmuls accumulate in fp32 via ``preferred_element_type``
+(bf16 weights on TPU), and every parameter leaf gets a logical sharding
+spec through ``repro.distributed.sharding`` at jit boundaries.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _dense_init(key, shape, dtype, in_axis: int = 0):
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def init_linear(key, d_in: int, d_out: int, dtype) -> Array:
+    return _dense_init(key, (d_in, d_out), dtype)
+
+
+def matmul(x: Array, w: Array) -> Array:
+    """fp32-accumulating matmul that keeps the activation dtype."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> Array:
+    return jnp.ones((d,), jnp.float32)
+
+
+def rms_norm(x: Array, scale: Array, eps: float) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def init_layernorm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(x: Array, p: dict, eps: float) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)
+            * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------
+
+def init_swiglu(key, d: int, ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"gate": init_linear(k1, d, ff, dtype),
+            "up": init_linear(k2, d, ff, dtype),
+            "down": init_linear(k3, ff, d, dtype)}
+
+
+def swiglu(p: dict, x: Array) -> Array:
+    g = matmul(x, p["gate"])
+    u = matmul(x, p["up"])
+    return matmul(jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u,
+                  p["down"])
+
+
+def init_gelu_mlp(key, d: int, ff: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"up": init_linear(k1, d, ff, dtype),
+            "down": init_linear(k2, ff, d, dtype)}
+
+
+def gelu_mlp(p: dict, x: Array) -> Array:
+    h = matmul(x, p["up"])
+    return matmul(jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype),
+                  p["down"])
+
+
+# ----------------------------------------------------------------------
+# embeddings + RoPE
+# ----------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32)
+            * (d ** -0.5)).astype(dtype)
+
+
+def rope_freqs(dh: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, H, S, Dh); positions: (B, S) or (S,)."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                         # (dh/2,)
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * inv                          # (..., S, dh/2)
+    if ang.ndim == 2:                                   # (S, dh/2)
+        ang = ang[None, None]
+    else:                                               # (B, S, dh/2)
+        ang = ang[:, None]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)

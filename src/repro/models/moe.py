@@ -1,0 +1,96 @@
+"""Mixture-of-Experts block with sort-based dispatch (OLMoE / Granite-MoE).
+
+Top-k softmax routing with capacity clamping, implemented as a
+sort-scatter-gather pipeline rather than the one-hot einsum dispatch:
+at train_4k scale (1M tokens, 64 experts, top-8) a (T, E, C) dispatch
+tensor is ~10^17 elements — the sort-based form is O(T*K*D + E*C*D) and
+shards cleanly: expert weights are laid out (E, d, ff) with E over the
+``model`` mesh axis (expert parallelism), token buffers over ``data``;
+GSPMD materializes the token exchange as all-to-alls.
+
+Load-balancing auxiliary loss (Switch-style) is returned for the trainer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    kr, ke = jax.random.split(key)
+    d, ff, E = cfg.d_model, cfg.expert_ff, cfg.n_experts
+    kg, ku, kd = jax.random.split(ke, 3)
+    return {
+        "router": L.init_linear(kr, d, E, jnp.float32),
+        "gate": L._dense_init(kg, (E, d, ff), cfg.dtype),
+        "up": L._dense_init(ku, (E, d, ff), cfg.dtype),
+        "down": L._dense_init(kd, (E, ff, d), cfg.dtype, in_axis=1),
+    }
+
+
+def moe_block(p: dict, x: Array, cfg: ModelConfig) -> tuple[Array, Array]:
+    """Returns (output (B,S,D), aux_loss ())."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = L.matmul(xt.astype(jnp.float32), p["router"])      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)              # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    me = probs.mean(0)                                            # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0 / (T * K))
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch -----------------------------------------
+    # serving-scale token counts get NO-DROP capacity (decode correctness:
+    # incremental must equal teacher-forced); train-scale uses the usual
+    # capacity-factor clamp
+    if T * K <= 4096:
+        cap = min(T * K, T)
+    else:
+        cap = int(cfg.capacity_factor * T * K / E + 0.999)
+    flat_e = expert_idx.reshape(-1)                               # (T*K,)
+    order = jnp.argsort(flat_e)                                   # stable
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * K) - starts[sorted_e]
+    keep = pos < cap
+    slot = jnp.where(keep, sorted_e * cap + pos, E * cap)         # overflow->sink
+    token = order // K
+
+    xe = jnp.zeros((E * cap + 1, D), x.dtype).at[slot].set(
+        xt[token], mode="drop")
+    xe = xe[:-1].reshape(E, cap, D)
+
+    # ---- expert FFN (swiglu), vmapped over experts --------------------
+    def ffn(xb, wg, wu, wd):
+        g = jax.lax.dot_general(xb, wg, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        u = jax.lax.dot_general(xb, wu, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(xb.dtype)
+        return jax.lax.dot_general(h, wd, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32
+                                   ).astype(xb.dtype)
+
+    he = jax.vmap(ffn)(xe, p["gate"], p["up"], p["down"])          # (E,cap,D)
+    he = he.reshape(E * cap, D)
+
+    # ---- combine -------------------------------------------------------
+    gathered = jnp.where(keep[:, None],
+                         he[jnp.minimum(slot, E * cap - 1)], 0.0)
+    w = gate_vals.reshape(-1)[order][:, None].astype(x.dtype)
+    out = jnp.zeros((T, D), x.dtype).at[token].add(gathered * w)
+    return out.reshape(B, S, D), aux

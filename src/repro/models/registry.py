@@ -1,0 +1,33 @@
+"""name -> (config, init, forward) resolution for every assigned arch."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, smoke_config
+
+ARCHS = [
+    "phi-3-vision-4.2b",
+    "codeqwen1.5-7b",
+    "glm4-9b",
+    "granite-3-8b",
+    "internlm2-1.8b",
+    "olmoe-1b-7b",
+    "granite-moe-1b-a400m",
+    "hymba-1.5b",
+    "xlstm-1.3b",
+    "whisper-large-v3",
+]
+
+
+def _module(name: str):
+    mod = name.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str, *, smoke: bool = False) -> ModelConfig:
+    cfg = _module(name).CONFIG
+    return smoke_config(cfg) if smoke else cfg
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

@@ -1,0 +1,113 @@
+"""Selective state-space mixer (Mamba S6 style) — the SSM half of Hymba.
+
+Training/prefill uses a *chunked* scan: an outer ``lax.scan`` over
+sequence chunks carrying the (B, d, N) state, with an associative scan
+inside each chunk.  The naive full-sequence associative scan would
+materialize a (B, S, d, N) fp32 tensor — at train_4k scale that is
+O(100 TB); chunking bounds the transient to (B, chunk, d, N), which is
+the TPU-native equivalent of the CUDA fused-scan kernel's tiling
+(DESIGN.md hardware-adaptation notes).
+
+Decode is the O(1) recurrent step on the carried state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+CHUNK = 32
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    d, N = cfg.d_model, cfg.ssm_state
+    kin, kdt, kb, kc, kout, kA = jax.random.split(key, 6)
+    return {
+        "in_proj": L.init_linear(kin, d, d, cfg.dtype),
+        "conv": (jax.random.normal(kin, (cfg.conv_kernel, d), jnp.float32)
+                 * 0.1).astype(cfg.dtype),
+        "w_dt": L.init_linear(kdt, d, d, cfg.dtype),
+        "dt_bias": jnp.zeros((d,), jnp.float32),
+        "w_B": L.init_linear(kb, d, N, cfg.dtype),
+        "w_C": L.init_linear(kc, d, N, cfg.dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32),
+                                  (d, 1))),
+        "D": jnp.ones((d,), jnp.float32),
+        "out_proj": L.init_linear(kout, d, d, cfg.dtype),
+    }
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> dict:
+    d, N = cfg.d_model, cfg.ssm_state
+    return {"h": jnp.zeros((batch, d, N), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, d), jnp.float32)}
+
+
+def _causal_conv(x: Array, w: Array, prefix: Array | None) -> Array:
+    """Depthwise causal conv1d.  x: (B, S, d), w: (K, d)."""
+    K = w.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return out, xp[:, -(K - 1):] if K > 1 else prefix
+
+
+def _ssm_params(p: dict, u: Array):
+    """u: (B, S, d) post-conv activations -> discretized dA, dBx, C."""
+    A = -jnp.exp(p["A_log"])                                     # (d, N)
+    dt = jax.nn.softplus(
+        L.matmul(u, p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    Bm = L.matmul(u, p["w_B"]).astype(jnp.float32)               # (B,S,N)
+    Cm = L.matmul(u, p["w_C"]).astype(jnp.float32)               # (B,S,N)
+    dA = jnp.exp(dt[..., None] * A)                              # (B,S,d,N)
+    dBx = (dt * u.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+    return dA, dBx, Cm
+
+
+def ssm_mixer(p: dict, x: Array, cfg: ModelConfig,
+              state: dict | None = None) -> tuple[Array, dict | None]:
+    """x: (B, S, d).  Returns (y, new_state)."""
+    B, S, d = x.shape
+    u = L.matmul(x, p["in_proj"])
+    conv_prefix = state["conv"] if state is not None else None
+    u, new_conv = _causal_conv(u, p["conv"], conv_prefix)
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((B, d, cfg.ssm_state), jnp.float32))
+
+    if S == 1:   # decode: O(1) recurrence
+        dA, dBx, Cm = _ssm_params(p, u)
+        h = dA[:, 0] * h0 + dBx[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None, :]
+        new_state = {"h": h, "conv": new_conv.astype(jnp.float32)}
+    else:
+        chunk = min(CHUNK, S)
+        assert S % chunk == 0, (S, chunk)
+        uc = u.reshape(B, S // chunk, chunk, d).transpose(1, 0, 2, 3)
+
+        def step(h, u_ch):
+            dA, dBx, Cm = _ssm_params(p, u_ch)
+            # prepend carry as a virtual step, associative-scan the chunk
+            op = lambda a, b: (b[0] * a[0], b[0] * a[1] + b[1])
+            dA_all = jnp.concatenate(
+                [jnp.ones((B, 1, d, cfg.ssm_state)), dA], axis=1)
+            dBx_all = jnp.concatenate([h[:, None], dBx], axis=1)
+            _, hs = jax.lax.associative_scan(op, (dA_all, dBx_all), axis=1)
+            hs = hs[:, 1:]                                       # (B,c,d,N)
+            y = jnp.einsum("bcdn,bcn->bcd", hs, Cm)
+            return hs[:, -1], y
+
+        h_last, ys = jax.lax.scan(step, h0, uc)
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, d)
+        new_state = ({"h": h_last, "conv": new_conv.astype(jnp.float32)}
+                     if state is not None else None)
+
+    y = y + p["D"] * u.astype(jnp.float32)
+    y = y.astype(x.dtype)
+    return L.matmul(y, p["out_proj"]), new_state

@@ -1,0 +1,296 @@
+"""Decoder-only LM covering the dense / vlm / moe / hybrid families.
+
+One scanned block body serves every depth: per-layer parameters are
+stacked on a leading axis and consumed by ``lax.scan`` (compact HLO,
+fast compiles — essential for the 40-cell dry-run).  Per-layer
+structural variation (Hymba's windowed-vs-global attention) rides along
+as a scanned ``meta`` array rather than unrolled branches.
+
+Families:
+  dense  — pre-norm GQA attention + SwiGLU MLP (CodeQwen/GLM/Granite/
+           InternLM and the Phi-3-vision backbone);
+  vlm    — dense backbone; image patch embeddings (stub frontend)
+           overlay the first ``n_img_tokens`` positions;
+  moe    — attention + sort-dispatch MoE (OLMoE, Granite-MoE);
+  hybrid — Hymba: attention and SSM mixer run in PARALLEL on the same
+           normed input, each post-normed, averaged, then MLP;
+  ssm    — delegated to models.xlstm (different block algebra).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S_mod
+from repro.models import xlstm as X
+from repro.models.config import ModelConfig
+
+S = S_mod  # legacy alias used by the block path
+
+Array = jax.Array
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig) -> dict:
+    ka, km, ks = jax.random.split(key, 3)
+    p: dict[str, Any] = {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "attn": A.init_attention(ka, cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+    }
+    if cfg.is_moe:
+        p["moe"] = M.init_moe(km, cfg)
+    elif cfg.d_ff:
+        p["mlp"] = L.init_swiglu(km, cfg.d_model, cfg.d_ff, cfg.dtype)
+    if cfg.family == "hybrid":
+        p["ssm"] = S.init_ssm(ks, cfg)
+        p["norm_attn"] = L.init_rmsnorm(cfg.d_model)
+        p["norm_ssm"] = L.init_rmsnorm(cfg.d_model)
+    return p
+
+
+def layer_meta(cfg: ModelConfig) -> dict:
+    """Per-layer scanned metadata."""
+    idx = jnp.arange(cfg.n_layers)
+    if cfg.family == "hybrid" and cfg.window:
+        ge = max(cfg.global_every, 1)
+        window = jnp.where(idx % ge == 0, 0, cfg.window).astype(jnp.int32)
+    else:
+        window = jnp.zeros((cfg.n_layers,), jnp.int32)
+    return {"window": window}
+
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    ke, kb, kh = jax.random.split(key, 3)
+    if cfg.family == "ssm":
+        return {
+            "embed": L.init_embedding(ke, cfg.vocab, cfg.d_model, cfg.dtype),
+            "xlstm": X.init_xlstm_stack(kb, cfg),
+            "final_norm": L.init_rmsnorm(cfg.d_model),
+            "lm_head": L.init_linear(kh, cfg.d_model, cfg.vocab, cfg.dtype),
+        }
+    bkeys = jax.random.split(kb, cfg.n_layers)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg))(bkeys)
+    return {
+        "embed": L.init_embedding(ke, cfg.vocab, cfg.d_model, cfg.dtype),
+        "blocks": blocks,
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "lm_head": L.init_linear(kh, cfg.d_model, cfg.vocab, cfg.dtype),
+    }
+
+
+# ----------------------------------------------------------------------
+# caches (decode / incremental prefill)
+# ----------------------------------------------------------------------
+
+class LayerCache(NamedTuple):
+    attn: A.KVCache | None
+    ssm: dict | None
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Per-layer decode caches.
+
+    cfg.scan_layers=True  -> stacked (leading n_layers axis), consumed by
+                             the scan path;
+    cfg.scan_layers=False -> a LIST of per-layer caches (vLLM-style
+                             layout): each layer's buffer is donated and
+                             updated in place with a STATIC index — the
+                             decode HBM floor (§Perf iteration 4).
+    """
+    if cfg.family == "ssm":
+        return X.init_xlstm_states(cfg, batch)
+    if not cfg.scan_layers:
+        out = []
+        for _ in range(cfg.n_layers):
+            kv = A.init_cache(cfg, batch, max_len)
+            ssm = (S_mod.init_ssm_state(cfg, batch)
+                   if cfg.family == "hybrid" else None)
+            out.append(LayerCache(attn=kv, ssm=ssm))
+        return out
+    Ln = cfg.n_layers
+    # windowed layers only ever read the trailing ``window`` positions,
+    # but we keep a uniform max_len cache for scan homogeneity; the
+    # hymba window cache optimization is a documented perf lever.
+    kv = A.KVCache(
+        k=jnp.zeros((Ln, batch, cfg.kv_heads_eff, max_len, cfg.dh),
+                    cfg.dtype),
+        v=jnp.zeros((Ln, batch, cfg.kv_heads_eff, max_len, cfg.dh),
+                    cfg.dtype),
+        length=jnp.zeros((Ln,), jnp.int32))
+    ssm = None
+    if cfg.family == "hybrid":
+        st = S.init_ssm_state(cfg, batch)
+        ssm = jax.tree.map(lambda x: jnp.zeros((Ln,) + x.shape, x.dtype), st)
+    return LayerCache(attn=kv, ssm=ssm)
+
+
+# ----------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------
+
+def _block(lp: dict, x: Array, cfg: ModelConfig, *, positions, meta,
+           cache: LayerCache | None):
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn_cache = cache.attn if cache is not None else None
+    out_a, new_attn = A.attention_block(
+        lp["attn"], h, cfg, positions=positions, causal=True,
+        window=meta["window"], cache=attn_cache)
+    new_ssm = None
+    if cfg.family == "hybrid":
+        ssm_state = cache.ssm if cache is not None else None
+        out_s, new_ssm = S.ssm_mixer(lp["ssm"], h, cfg, ssm_state)
+        out_a = 0.5 * (L.rms_norm(out_a, lp["norm_attn"], cfg.norm_eps)
+                       + L.rms_norm(out_s, lp["norm_ssm"], cfg.norm_eps))
+    x = x + out_a
+    h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        out_m, aux = M.moe_block(lp["moe"], h2, cfg)
+    elif cfg.d_ff:
+        out_m = L.swiglu(lp["mlp"], h2)
+    else:
+        out_m = jnp.zeros_like(h2)
+    x = x + out_m
+    new_cache = (LayerCache(attn=new_attn, ssm=new_ssm)
+                 if cache is not None else None)
+    return x, new_cache, aux
+
+
+def _forward_decode_carry(params: dict, cfg: ModelConfig, x: Array,
+                          positions: Array, caches: LayerCache):
+    """Decode/incremental path with the stacked KV cache as a scan CARRY.
+
+    §Perf iteration 3: threading per-layer caches through scan xs->ys
+    forces XLA to copy each layer's full cache every step (~2x cache
+    bytes per token).  As a carry, the token-slice dynamic-update-slice
+    aliases in place: per-layer traffic = one cache READ (the attention
+    must read it) + a token-sized write — the HBM floor for decode.
+    """
+    Ln = cfg.n_layers
+    kc, vc = caches.attn.k, caches.attn.v          # (L,B,Hkv,T,dh)
+    length = caches.attn.length[0]
+    S = x.shape[1]
+    meta = layer_meta(cfg)
+    idxs = jnp.arange(Ln)
+    ssm_xs = caches.ssm if caches.ssm is not None else 0 * idxs
+
+    def body(carry, per_layer):
+        xc, kc, vc = carry
+        lp, mt, idx, ssm_st = per_layer
+        h = L.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        q, k, v = A.project_qkv(lp["attn"], h, cfg, positions=positions)
+        kc = jax.lax.dynamic_update_slice(
+            kc, k[None].astype(kc.dtype), (idx, 0, 0, length, 0))
+        vc = jax.lax.dynamic_update_slice(
+            vc, v[None].astype(vc.dtype), (idx, 0, 0, length, 0))
+        k_all = jax.lax.dynamic_index_in_dim(kc, idx, 0, keepdims=False)
+        v_all = jax.lax.dynamic_index_in_dim(vc, idx, 0, keepdims=False)
+        out_a = A.attend(q, k_all, v_all, cfg, causal=True,
+                         window=mt["window"], kv_len=length + S)
+        out_a = L.matmul(A._merge_heads(out_a), lp["attn"]["wo"])
+        new_ssm = None
+        if cfg.family == "hybrid":
+            out_s, new_ssm = S_mod.ssm_mixer(lp["ssm"], h, cfg, ssm_st)
+            out_a = 0.5 * (L.rms_norm(out_a, lp["norm_attn"], cfg.norm_eps)
+                           + L.rms_norm(out_s, lp["norm_ssm"], cfg.norm_eps))
+        xc = xc + out_a
+        h2 = L.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            out_m, _ = M.moe_block(lp["moe"], h2, cfg)
+        elif cfg.d_ff:
+            out_m = L.swiglu(lp["mlp"], h2)
+        else:
+            out_m = jnp.zeros_like(h2)
+        return (xc + out_m, kc, vc), new_ssm
+
+    (x, kc, vc), new_ssm = jax.lax.scan(
+        body, (x, kc, vc), (params["blocks"], meta, idxs, ssm_xs))
+    new_caches = LayerCache(
+        attn=A.KVCache(k=kc, v=vc, length=caches.attn.length + S),
+        ssm=new_ssm if cfg.family == "hybrid" else None)
+    return x, new_caches
+
+
+def forward(params: dict, cfg: ModelConfig, *, tokens: Array | None = None,
+            embeds: Array | None = None, img_embeds: Array | None = None,
+            positions: Array | None = None, caches=None,
+            want_logits: bool = True):
+    """Returns (logits | hidden, new_caches, aux).
+
+    tokens: (B, S) int32 — or ``embeds``: (B, S, D) pre-embedded (audio
+    frames / serving with external embedding service).
+    img_embeds: (B, n_img, D) VLM stub-frontend patch embeddings,
+    overlaid on the first n_img positions.
+    caches: stacked per-layer caches -> decode/incremental mode.
+    """
+    if embeds is None:
+        x = params["embed"][tokens]
+    else:
+        x = embeds.astype(cfg.dtype)
+    if img_embeds is not None and cfg.n_img_tokens:
+        n = cfg.n_img_tokens
+        x = jnp.concatenate([img_embeds.astype(cfg.dtype)[:, :n],
+                             x[:, n:]], axis=1)
+    B, Sq, _ = x.shape
+    if positions is None:
+        if isinstance(caches, list):
+            base = caches[0].attn.length
+        elif caches is not None and cfg.family != "ssm":
+            base = caches.attn.length[0]
+        else:
+            base = 0
+        positions = base + jnp.arange(Sq)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        x, new_caches = X.xlstm_stack(params["xlstm"], x, cfg, caches)
+    elif isinstance(caches, list):
+        # serving, unrolled: per-layer donated buffers, static in-place
+        # updates (§Perf iteration 4 — the decode HBM floor)
+        meta = layer_meta(cfg)
+        new_caches = []
+        for i, ca in enumerate(caches):
+            lp = jax.tree.map(lambda p: p[i], params["blocks"])
+            mt = {"window": meta["window"][i]}
+            x, new_ca, _ = _block(lp, x, cfg, positions=positions,
+                                  meta=mt, cache=ca)
+            new_caches.append(new_ca)
+    elif caches is not None:
+        # serving: stacked-carry cache path (§Perf iteration 3)
+        x, new_caches = _forward_decode_carry(params, cfg, x, positions,
+                                              caches)
+    else:
+        meta = layer_meta(cfg)
+
+        def body(xc, per_layer):
+            lp, mt = per_layer
+            y, _, aux = _block(lp, xc, cfg, positions=positions,
+                               meta=mt, cache=None)
+            return y, aux
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        elif cfg.remat == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+        x, auxs = jax.lax.scan(body, x, (params["blocks"], meta))
+        new_caches = None
+        aux_total = auxs.sum()
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if not want_logits:
+        return x, new_caches, aux_total
+    logits = L.matmul(x, params["lm_head"])
+    return logits, new_caches, aux_total

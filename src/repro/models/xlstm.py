@@ -1,0 +1,351 @@
+"""xLSTM blocks: mLSTM (matrix memory) + sLSTM (scalar memory).
+
+Follows arXiv:2405.04517 with the stabilized exponential gating
+(running log-max stabilizer m_t).  Simplifications recorded in
+DESIGN.md: sLSTM uses diagonal recurrence vectors instead of full
+block-diagonal recurrent matrices.
+
+Layer layout for an ``slstm_every = k`` config: groups of (k-1) mLSTM
+layers + 1 sLSTM layer, scanned at both levels so the HLO stays compact
+(one mLSTM body + one sLSTM body regardless of depth).
+
+The mLSTM recurrence is inherently sequential over time (the matrix
+memory C_t is rank-1-updated with input-dependent decay); training uses
+``lax.scan`` over the sequence — each step is still a batch of MXU
+outer-products/matvecs.  Decode carries (C, n, m) per layer: O(1) state,
+which is why this arch runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+PROJ = 2  # mLSTM up-projection factor (paper's 1.3B setting)
+
+
+# ----------------------------------------------------------------------
+# mLSTM
+# ----------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = PROJ * d
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": L.init_rmsnorm(d),
+        "w_up": L.init_linear(ks[0], d, di, cfg.dtype),
+        "w_z": L.init_linear(ks[1], d, di, cfg.dtype),
+        "wq": L.init_linear(ks[2], di, di, cfg.dtype),
+        "wk": L.init_linear(ks[3], di, di, cfg.dtype),
+        "wv": L.init_linear(ks[4], di, di, cfg.dtype),
+        "w_i": L.init_linear(ks[5], di, cfg.n_heads, jnp.float32),
+        "w_f": L.init_linear(ks[6], di, cfg.n_heads, jnp.float32),
+        "f_bias": jnp.full((cfg.n_heads,), 3.0, jnp.float32),
+        "gn": L.init_rmsnorm(di),
+        "w_down": L.init_linear(ks[7], di, d, cfg.dtype),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> dict:
+    H = cfg.n_heads
+    dh = PROJ * cfg.d_model // H
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+def _mlstm_cell(carry, qkvif):
+    """One time step.  carry: (C, n, m); q/k/v: (B,H,dh), i/f: (B,H)."""
+    C, n, m = carry
+    q, k, v, log_i, log_f = qkvif
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_ = jnp.exp(log_i - m_new)[..., None]                      # (B,H,1)
+    f_ = jnp.exp(log_f + m - m_new)[..., None]
+    n_new = f_ * n + i_ * k
+    C_new = f_[..., None] * C + i_[..., None] * (v[..., None] * k[..., None, :])
+    num = jnp.einsum("bhij,bhj->bhi", C_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n_new, q)), 1.0)
+    h = num / den[..., None]                                     # (B,H,dh)
+    return (C_new, n_new, m_new), h
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f, carry, chunk: int):
+    """Chunkwise-parallel mLSTM (stabilized) — §Perf optimization.
+
+    The sequential cell materializes the (dh x dh) matrix memory EVERY
+    timestep: O(S * B * H * dh^2) HBM traffic, the dominant roofline
+    term of the xlstm train cell.  The chunkwise form (cf. the xLSTM
+    kernels / chunkwise linear-attention lineage) materializes C only at
+    chunk boundaries and handles intra-chunk interactions as masked
+    (Tc x Tc) matmuls — traffic / chunk, MXU-friendly.
+
+    Derivation (per head; b_t = cumsum(log f) within the chunk,
+    a_j = log i_j - b_j,  g_t = max(m_in, cummax_{j<=t} a_j),
+    m_t = b_t + g_t — identical to the sequential recurrence by
+    induction):
+
+      h~_t  = e^{m_in - g_t} (C~_in q_t)
+              + sum_{j<=t} e^{a_j - g_t} (k_j.q_t) v_j
+      den_t = max(|e^{m_in - g_t} (n~_in.q_t)
+              + sum_{j<=t} e^{a_j - g_t} (k_j.q_t)|, 1)
+
+    Every exponent is <= 0 by construction of g_t, so nothing overflows
+    (including the m_in = -1e30 cold-start sentinel).  Matches the
+    sequential cell exactly (tests/test_models.py::test_mlstm_chunkwise).
+
+    q/k/v: (B, S, H, dh); log_i/log_f: (B, S, H);
+    carry: (C~ (B,H,dh,dh), n~ (B,H,dh), m (B,H)).
+    """
+    B, S, H, dh = q.shape
+    nc = S // chunk
+    resh = lambda x: x.reshape(B, nc, chunk, *x.shape[2:]).transpose(
+        1, 0, *range(2, x.ndim + 1))
+    qc, kc, vc = resh(q), resh(k), resh(v)            # (nc,B,Tc,H,dh)
+    lic, lfc = resh(log_i), resh(log_f)               # (nc,B,Tc,H)
+
+    def chunk_step(carry, xs):
+        C_in, n_in, m_in = carry                      # (B,H,dh,dh) ...
+        qt, kt, vt, li, lf = xs
+        b = jnp.cumsum(lf, axis=1)                    # (B,Tc,H)
+        a = li - b                                    # (B,Tc,H)
+        g = jnp.maximum(m_in[:, None, :], jax.lax.cummax(a, axis=1))
+        w_inter = jnp.exp(m_in[:, None, :] - g)       # (B,Tc,H), <= 1
+
+        # inter-chunk: contribution of the carried state
+        inter = jnp.einsum("bthd,bhed->bthe", qt, C_in)      # (B,Tc,H,dh)
+        den_in = jnp.einsum("bthd,bhd->bth", qt, n_in)       # (B,Tc,H)
+
+        # intra-chunk: masked (Tc x Tc) attention-like matmuls with the
+        # pairwise stable weights  w[t,j] = e^{a_j - g_t}  (j <= t)
+        s = jnp.einsum("bthd,bjhd->bhtj", qt, kt)            # (B,H,Tc,Tc)
+        diff = (a.transpose(0, 2, 1)[:, :, None, :]
+                - g.transpose(0, 2, 1)[:, :, :, None])       # (B,H,t,j)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        wmat = jnp.where(mask, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+        sw = s * wmat                                        # (B,H,Tc,Tc)
+        intra = jnp.einsum("bhtj,bjhd->bthd", sw, vt)
+        den_intra = jnp.sum(sw, axis=3).transpose(0, 2, 1)   # (B,Tc,H)
+
+        num = w_inter[..., None] * inter + intra
+        den = w_inter * den_in + den_intra
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+        # carry to next chunk (materialized ONCE per chunk)
+        gT = g[:, -1, :]                                     # (B,H)
+        wT = jnp.exp(a - gT[:, None, :])                     # (B,Tc,H)
+        C_out = (jnp.exp(m_in - gT)[:, :, None, None] * C_in
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", wT, vt, kt))
+        n_out = (jnp.exp(m_in - gT)[:, :, None] * n_in
+                 + jnp.einsum("bjh,bjhd->bhd", wT, kt))
+        m_out = b[:, -1, :] + gT
+        return (C_out, n_out, m_out), h
+
+    carry, hs = jax.lax.scan(chunk_step, carry, (qc, kc, vc, lic, lfc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    return carry, h
+
+
+def mlstm_layer(p: dict, x: Array, cfg: ModelConfig,
+                state: dict | None = None) -> tuple[Array, dict | None]:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    di = PROJ * d
+    dh = di // H
+    xin = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    u = L.matmul(xin, p["w_up"])                                 # (B,S,di)
+    z = L.matmul(xin, p["w_z"])
+
+    def heads(w):
+        return L.matmul(u, w).reshape(B, S, H, dh).astype(jnp.float32)
+
+    q, k, v = heads(p["wq"]), heads(p["wk"]) * dh ** -0.5, heads(p["wv"])
+    log_i = L.matmul(u, p["w_i"]).astype(jnp.float32)            # (B,S,H)
+    log_f = jax.nn.log_sigmoid(
+        L.matmul(u, p["w_f"]).astype(jnp.float32) + p["f_bias"])
+
+    if state is None:
+        carry = (jnp.zeros((B, H, dh, dh), jnp.float32),
+                 jnp.zeros((B, H, dh), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+    else:
+        carry = (state["C"], state["n"], state["m"])
+
+    chunk = cfg.mlstm_chunk
+    if chunk and S > 1 and S % chunk == 0:
+        (C, n, m), hs4 = _mlstm_chunkwise(q, k, v, log_i, log_f, carry,
+                                          chunk)
+        h = hs4.reshape(B, S, di).astype(x.dtype)
+    else:
+        xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+              v.transpose(1, 0, 2, 3), log_i.transpose(1, 0, 2),
+              log_f.transpose(1, 0, 2))
+        (C, n, m), hs = jax.lax.scan(_mlstm_cell, carry, xs)
+        h = hs.transpose(1, 0, 2, 3).reshape(B, S, di).astype(x.dtype)
+    h = L.rms_norm(h, p["gn"], cfg.norm_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = x + L.matmul(h, p["w_down"])
+    new_state = ({"C": C, "n": n, "m": m} if state is not None else None)
+    return out, new_state
+
+
+# ----------------------------------------------------------------------
+# sLSTM (diagonal recurrence)
+# ----------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": L.init_rmsnorm(d),
+        "w_in": L.init_linear(ks[0], d, 4 * d, cfg.dtype),
+        "r_diag": (jax.random.normal(ks[1], (4, d), jnp.float32) * 0.02),
+        "f_bias": jnp.full((d,), 3.0, jnp.float32),
+        "w_out": L.init_linear(ks[2], d, d, cfg.dtype),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"c": z(), "n": z(), "m": jnp.full((batch, d), -1e30, jnp.float32),
+            "h": z()}
+
+
+def _slstm_cell(p, carry, g):
+    c, n, m, h_prev = carry
+    gz, gi, gf, go = jnp.split(g, 4, axis=-1)                    # (B,d) each
+    rz, ri, rf, ro = p["r_diag"]
+    z = jnp.tanh(gz + rz * h_prev)
+    log_i = gi + ri * h_prev
+    log_f = jax.nn.log_sigmoid(gf + rf * h_prev + p["f_bias"])
+    o = jax.nn.sigmoid(go + ro * h_prev)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_ = jnp.exp(log_i - m_new)
+    f_ = jnp.exp(log_f + m - m_new)
+    c_new = f_ * c + i_ * z
+    n_new = f_ * n + i_
+    h = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h), h
+
+
+def slstm_layer(p: dict, x: Array, cfg: ModelConfig,
+                state: dict | None = None) -> tuple[Array, dict | None]:
+    B, S, d = x.shape
+    xin = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    g = L.matmul(xin, p["w_in"]).astype(jnp.float32)             # (B,S,4d)
+    if state is None:
+        carry = (jnp.zeros((B, d), jnp.float32),) * 2 + (
+            jnp.full((B, d), -1e30, jnp.float32),
+            jnp.zeros((B, d), jnp.float32))
+    else:
+        carry = (state["c"], state["n"], state["m"], state["h"])
+    cell = lambda cr, gg: _slstm_cell(p, cr, gg)
+    (c, n, m, h_last), hs = jax.lax.scan(cell, carry, g.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    out = x + L.matmul(h, p["w_out"])
+    new_state = ({"c": c, "n": n, "m": m, "h": h_last}
+                 if state is not None else None)
+    return out, new_state
+
+
+# ----------------------------------------------------------------------
+# full xLSTM stack (grouped scan)
+# ----------------------------------------------------------------------
+
+def group_structure(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_groups, mlstm_per_group).  slstm_every = 0 -> all mLSTM."""
+    if cfg.slstm_every <= 0:
+        return 1, cfg.n_layers
+    assert cfg.n_layers % cfg.slstm_every == 0
+    return cfg.n_layers // cfg.slstm_every, cfg.slstm_every - 1
+
+
+def init_xlstm_stack(key, cfg: ModelConfig) -> dict:
+    G, K = group_structure(cfg)
+    km, ks = jax.random.split(key)
+
+    def init_m(k):
+        return init_mlstm(k, cfg)
+
+    mkeys = jax.random.split(km, G * max(K, 1)).reshape(G, max(K, 1), 2)
+    mlstm = jax.vmap(jax.vmap(init_m))(mkeys)
+    out = {"mlstm": mlstm}
+    if cfg.slstm_every > 0:
+        skeys = jax.random.split(ks, G)
+        out["slstm"] = jax.vmap(lambda k: init_slstm(k, cfg))(skeys)
+    return out
+
+
+def init_xlstm_states(cfg: ModelConfig, batch: int) -> dict:
+    G, K = group_structure(cfg)
+    H = cfg.n_heads
+    dh = PROJ * cfg.d_model // H
+    d = cfg.d_model
+    out = {"mlstm": {
+        "C": jnp.zeros((G, max(K, 1), batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((G, max(K, 1), batch, H, dh), jnp.float32),
+        "m": jnp.full((G, max(K, 1), batch, H), -1e30, jnp.float32),
+    }}
+    if cfg.slstm_every > 0:
+        out["slstm"] = {
+            "c": jnp.zeros((G, batch, d), jnp.float32),
+            "n": jnp.zeros((G, batch, d), jnp.float32),
+            "m": jnp.full((G, batch, d), -1e30, jnp.float32),
+            "h": jnp.zeros((G, batch, d), jnp.float32),
+        }
+    return out
+
+
+def xlstm_stack(params: dict, x: Array, cfg: ModelConfig,
+                states: dict | None = None) -> tuple[Array, dict | None]:
+    """Grouped scan over (k-1) mLSTM + 1 sLSTM blocks per group."""
+    has_slstm = cfg.slstm_every > 0
+
+    if states is None:
+        # training path: no state threading (avoids stacking dead final
+        # states through the scans)
+        def layer_body(xc, lp):
+            y, _ = mlstm_layer(lp, xc, cfg, None)
+            return y, None
+
+        def group_body(xc, inp):
+            xc, _ = jax.lax.scan(layer_body, xc, inp["mlstm"])
+            if has_slstm:
+                xc, _ = slstm_layer(inp["slstm"], xc, cfg, None)
+            return xc, None
+
+        if cfg.remat != "none":
+            # remat each layer: without this, the backward pass saves the
+            # per-chunk (B,H,dh,dh) matrix-memory residuals of every
+            # chunk of every layer — the dominant HBM term of the train
+            # cell (§Perf iteration 2)
+            layer_body = jax.checkpoint(
+                layer_body,
+                policy=jax.checkpoint_policies.nothing_saveable)
+            group_body = jax.checkpoint(
+                group_body,
+                policy=jax.checkpoint_policies.nothing_saveable)
+
+        x, _ = jax.lax.scan(group_body, x, params)
+        return x, None
+
+    def layer_body_st(xc, inp):
+        lp, st = inp
+        y, st2 = mlstm_layer(lp, xc, cfg, st)
+        return y, st2
+
+    def group_body_st(xc, inp):
+        pg, sg = inp
+        xc, mst2 = jax.lax.scan(layer_body_st, xc, (pg["mlstm"], sg["mlstm"]))
+        out = {"mlstm": mst2}
+        if has_slstm:
+            xc, out["slstm"] = slstm_layer(pg["slstm"], xc, cfg, sg["slstm"])
+        return xc, out
+
+    x, new_states = jax.lax.scan(group_body_st, x, (params, states))
+    return x, new_states

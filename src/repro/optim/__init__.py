@@ -1,0 +1,6 @@
+"""Optimizer substrate: AdamW + schedules + global-norm clipping."""
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_schedule, global_norm)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm"]

@@ -1,0 +1,6 @@
+"""Serving substrate: prefill + decode steps with KV/SSM caches."""
+from repro.serve.engine import (decode_step_fn, greedy_generate, prefill_fn,
+                                whisper_decode_step_fn)
+
+__all__ = ["prefill_fn", "decode_step_fn", "greedy_generate",
+           "whisper_decode_step_fn"]

@@ -1,0 +1,54 @@
+"""Serving steps — what the decode_32k / long_500k dry-run cells lower.
+
+``decode_step_fn``: ONE new token per request against a pre-filled cache
+(the assigned decode shapes: cache length = seq_len, batch = global
+decode batch).  ``prefill_fn`` builds the cache from a prompt in a
+single forward.  ``greedy_generate`` chains them for the examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models import whisper as W
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def prefill_fn(params, cfg: ModelConfig, tokens: Array, max_len: int,
+               img_embeds: Array | None = None):
+    """Returns (caches, last_token_logits)."""
+    B = tokens.shape[0]
+    caches = T.init_caches(cfg, B, max_len)
+    logits, caches, _ = T.forward(params, cfg, tokens=tokens,
+                                  img_embeds=img_embeds, caches=caches)
+    return caches, logits[:, -1]
+
+
+def decode_step_fn(params, cfg: ModelConfig, token: Array, caches):
+    """token: (B, 1) -> (logits (B, vocab), new caches)."""
+    logits, caches, _ = T.forward(params, cfg, tokens=token, caches=caches)
+    return logits[:, -1], caches
+
+
+def whisper_decode_step_fn(params, cfg: ModelConfig, token: Array,
+                           enc_out: Array, caches):
+    logits, caches = W.decode(params, token, enc_out, cfg, caches)
+    return logits[:, -1], caches
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt: Array, steps: int,
+                    max_len: int) -> Array:
+    caches, logits = prefill_fn(params, cfg, prompt, max_len)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+    def body(carry, _):
+        tok, caches = carry
+        logits, caches = decode_step_fn(params, cfg, tok, caches)
+        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        return (nxt, caches), nxt[:, 0]
+
+    (_, _), out = jax.lax.scan(body, (tok, caches), None, length=steps)
+    return jnp.concatenate([prompt, tok, out.T], axis=1)

@@ -1,0 +1,8 @@
+"""Trace-driven discrete-event cluster simulator (paper §4)."""
+from repro.sim.cluster import Cluster, ClusterConfig
+from repro.sim.engine import SimConfig, run_sim
+from repro.sim.metrics import SimResults
+from repro.sim.workload import Workload, WorkloadConfig, generate
+
+__all__ = ["Cluster", "ClusterConfig", "SimConfig", "run_sim", "SimResults",
+           "Workload", "WorkloadConfig", "generate"]

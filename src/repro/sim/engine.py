@@ -1,0 +1,311 @@
+"""Simulation engine (paper §4): FIFO scheduler + monitor + forecast +
+resource shaper, advanced in 60 s monitoring ticks.
+
+Per tick:
+  1. arrivals enter the FIFO queue (priority = ORIGINAL submit time, so a
+     resubmitted-after-failure app re-enters "commensurate to its original
+     priority" — paper §3.2);
+  2. running apps progress (elastic rate model), completions recorded;
+  3. the monitor samples per-component CPU/memory usage;
+  4. past the grace period, the forecaster predicts each component's
+     future utilization (mean + variance), the safeguard buffer (Eq. 9)
+     turns it into a shaped demand, and the shaping policy (baseline /
+     optimistic / pessimistic Algorithm 1) computes allocations +
+     preemptions, which are applied through the preemption primitives;
+  5. the OS OOM handler fires for any host whose true usage exceeds
+     capacity (the uncontrolled-failure channel);
+  6. the scheduler admits queued apps into freed capacity and re-places
+     missing elastic components.
+
+Forecast + shaping run as jitted, vmapped JAX on fixed-size padded
+batches — identical code paths to the live framework's shaper service.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.forecast import (ARIMAConfig, ARIMAForecaster, GPConfig,
+                                 GPForecaster)
+from repro.core.monitor import Monitor
+from repro.core.shaper import (POLICIES, SafeguardConfig, ShapeProblem,
+                               shaped_demand)
+from repro.sim.cluster import CPU, MEM, Cluster, ClusterConfig
+from repro.sim.metrics import SimResults
+from repro.sim.workload import Workload, WorkloadConfig, generate
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    cluster: ClusterConfig = ClusterConfig()
+    workload: WorkloadConfig = WorkloadConfig()
+    policy: str = "pessimistic"          # baseline | optimistic | pessimistic
+    forecaster: str = "gp"               # oracle | gp | arima | persist
+    safeguard: SafeguardConfig = SafeguardConfig()
+    window: int = 24                     # monitor window (ticks)
+    grace: int = 10                      # grace period (paper §5: 10 min)
+    horizon: int = 3                     # forecast look-ahead (ticks)
+    gp: GPConfig = GPConfig(history=10, max_patterns=10, opt_steps=10)
+    arima: ARIMAConfig = ARIMAConfig()
+    max_ticks: int = 100_000
+    work_lost_on_kill: bool = True       # kill primitive loses all work
+
+
+def _bucket(n: int) -> int:
+    b = 64
+    while b < n:
+        b *= 2
+    return b
+
+
+class _BatchedForecaster:
+    """Caches jitted batched forecast fns per (kind, bucket size)."""
+
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self._jitted = {}
+        if cfg.forecaster == "gp":
+            self._model = GPForecaster(cfg.gp)
+        elif cfg.forecaster == "arima":
+            self._model = ARIMAForecaster(cfg.arima)
+        else:
+            self._model = None
+
+    def __call__(self, windows: np.ndarray, valid: np.ndarray):
+        """windows: (n, W) -> (peak_mean, peak_var) each (n,)."""
+        cfg = self.cfg
+        n = windows.shape[0]
+        if cfg.forecaster == "persist":
+            mean = windows[:, -1]
+            var = windows.var(axis=1, where=valid) + 1e-6
+            return mean, var
+        b = _bucket(n)
+        if b not in self._jitted:
+            model, horizon = self._model, cfg.horizon
+
+            @jax.jit
+            def fn(w, v):
+                fc = model.forecast_batch(w, horizon, valid=v)
+                # future PEAK utilization (paper §4.2: predictor outputs a
+                # future peak; we take the max of the path + its variance)
+                k = jnp.argmax(fc.mean, axis=1)
+                peak = jnp.take_along_axis(fc.mean, k[:, None], 1)[:, 0]
+                pvar = jnp.take_along_axis(fc.var, k[:, None], 1)[:, 0]
+                return peak, pvar
+
+            self._jitted[b] = fn
+        wpad = np.zeros((b, windows.shape[1]), np.float32)
+        vpad = np.zeros((b, windows.shape[1]), bool)
+        wpad[:n], vpad[:n] = windows, valid
+        peak, pvar = self._jitted[b](jnp.asarray(wpad), jnp.asarray(vpad))
+        return np.asarray(peak)[:n], np.asarray(pvar)[:n]
+
+
+def _oracle_peaks(cluster: Cluster, wl: Workload, horizon: int,
+                  tick: float) -> np.ndarray:
+    """(A, C, 2) true future peak usage over the horizon (variance 0)."""
+    A, C = cluster.A, cluster.C
+    out = np.zeros((A, C, 2), np.float32)
+    run = cluster.running_slots()
+    if run.size == 0:
+        return out
+    gids = cluster.slot_gid[run]
+    rate = cluster.progress_rate(wl)[run]
+    peaks = np.zeros((run.size, C, 2), np.float32)
+    for k in range(1, horizon + 1):
+        prog = np.clip((cluster.work_done[run] + rate * tick * k)
+                       / wl.runtime[gids], 0.0, 1.0)
+        u = wl.usage(gids, prog) * cluster.comp_running[run][:, :, None]
+        peaks = np.maximum(peaks, u)
+    out[run] = peaks
+    return out
+
+
+def run_sim(cfg: SimConfig, wl: Workload | None = None) -> SimResults:
+    wl = wl if wl is not None else generate(cfg.workload)
+    N, C = wl.n_apps, wl.max_components
+    cl = Cluster(cfg.cluster, C)
+    A = cl.A
+    mon = Monitor(slots=A * C, window=cfg.window)
+    fc = _BatchedForecaster(cfg)
+    policy_fn = POLICIES[cfg.policy]
+    res = SimResults(n_apps=N)
+    tick = cfg.cluster.tick
+
+    queue: list[tuple[float, int]] = []   # (original submit, gid) sorted
+    arrived = 0
+    done = np.zeros((N,), bool)
+    submit0 = wl.submit.copy()            # original submit (priority key)
+    # preempt-to-checkpoint mode (work_lost_on_kill=False): a preempted
+    # app resumes from its last "checkpoint" (saved progress) instead of
+    # restarting — the TPU adaptation's beyond-paper ablation
+    saved_work: dict[int, float] = {}
+
+    def requeue(gid: int):
+        bisect.insort(queue, (float(submit0[gid]), gid))
+
+    t = 0.0
+    for step in range(cfg.max_ticks):
+        if done.all():
+            break
+        t += tick
+
+        # 1. arrivals ---------------------------------------------------
+        while arrived < N and wl.submit[arrived] <= t:
+            requeue(arrived)
+            arrived += 1
+
+        # 2. progress + completions --------------------------------------
+        rate = cl.progress_rate(wl)
+        cl.work_done += rate * tick
+        for slot in cl.running_slots():
+            gid = int(cl.slot_gid[slot])
+            if cl.work_done[slot] >= wl.runtime[gid]:
+                for c in range(C):
+                    if cl.comp_running[slot, c]:
+                        mon.reset_slot(slot * C + c)
+                cl.evict_app(slot)
+                done[gid] = True
+                res.record_completion(gid, submit0[gid], t)
+
+        # 3. monitor sampling --------------------------------------------
+        usage = cl.usage_now(wl)
+        run = cl.running_slots()
+        if run.size:
+            rc = np.nonzero(cl.comp_running[run])  # (slot_i, c)
+            mslots = run[rc[0]] * C + rc[1]
+            mon.record(mslots, usage[run][rc][:, CPU], usage[run][rc][:, MEM])
+
+        # 4. shaping ------------------------------------------------------
+        # two distinct kill channels (paper §4.2): controlled preemptions
+        # (Algorithm 1, work lost but clean) vs uncontrolled OS OOM kills
+        # (the "application failures" metric of Figs. 3-4)
+        preempted_this_tick: list[int] = []
+        oom_failed_this_tick: list[int] = []
+        if cfg.policy != "baseline" and run.size:
+            gids = cl.slot_gid[run]
+            req = np.stack([wl.cpu_req[gids], wl.mem_req[gids]], -1)  # (n,C,2)
+            running = cl.comp_running[run]
+            demand = np.where(running[:, :, None], req, 0.0).astype(np.float32)
+
+            if cfg.forecaster == "oracle":
+                # perfect information needs no training history: the grace
+                # period (paper §5) exists only for statistical models
+                peaks = _oracle_peaks(cl, wl, cfg.horizon, tick)[run]
+                var = np.zeros_like(peaks)
+                ready = running
+                shaped = np.asarray(shaped_demand(
+                    jnp.asarray(peaks), jnp.asarray(req), jnp.asarray(var),
+                    cfg.safeguard))
+                demand = np.where(ready[:, :, None], shaped, demand)
+            else:
+                rc = np.nonzero(running)
+                mslots = run[rc[0]] * C + rc[1]
+                ready = mon.ready(mslots, cfg.grace)
+                if ready.any():
+                    sel = np.nonzero(ready)[0]
+                    wins, vmask = mon.windows(mslots[sel])
+                    n = sel.size
+                    wflat = np.concatenate([wins[:, :, CPU], wins[:, :, MEM]])
+                    vflat = np.concatenate([vmask, vmask])
+                    mean, var = fc(wflat, vflat)
+                    reqs = req[rc[0][sel], rc[1][sel]]     # (n, 2)
+                    for r, off in ((CPU, 0), (MEM, n)):
+                        sh = np.asarray(shaped_demand(
+                            jnp.asarray(mean[off:off + n]),
+                            jnp.asarray(reqs[:, r]),
+                            jnp.asarray(var[off:off + n]),
+                            cfg.safeguard))
+                        demand[rc[0][sel], rc[1][sel], r] = sh
+
+            # build the fixed-size ShapeProblem over ALL slots
+            dem_full = np.zeros((A, C, 2), np.float32)
+            dem_full[run] = demand
+            app_exists = cl.slot_gid >= 0
+            order = np.full((A,), -1, np.int64)
+            fifo = np.argsort(submit0[np.maximum(cl.slot_gid, 0)]
+                              + np.where(app_exists, 0, 1e18))
+            order[:run.size] = fifo[:run.size]
+            prob = ShapeProblem(
+                host_cpu=jnp.asarray(cl.host_cap[:, CPU]),
+                host_mem=jnp.asarray(cl.host_cap[:, MEM]),
+                app_exists=jnp.asarray(app_exists),
+                app_order=jnp.asarray(order),
+                comp_exists=jnp.asarray(cl.comp_running),
+                comp_core=jnp.asarray(
+                    wl.is_core[np.maximum(cl.slot_gid, 0)]
+                    & app_exists[:, None]),
+                comp_host=jnp.asarray(cl.comp_host),
+                comp_cpu=jnp.asarray(dem_full[:, :, CPU]),
+                comp_mem=jnp.asarray(dem_full[:, :, MEM]),
+                comp_alive=jnp.asarray(t - cl.alive_since),
+            )
+            dec = policy_fn(prob)
+            kill_app = np.asarray(dec.kill_app)
+            kill_comp = np.asarray(dec.kill_comp)
+            alloc_cpu = np.asarray(dec.alloc_cpu)
+            alloc_mem = np.asarray(dec.alloc_mem)
+
+            for slot in np.nonzero(kill_app & app_exists)[0]:
+                if not cfg.work_lost_on_kill:
+                    gid0 = int(cl.slot_gid[slot])
+                    saved_work[gid0] = float(cl.work_done[slot])
+                gid = cl.evict_app(int(slot))
+                usage[slot] = 0.0
+                for c in range(C):
+                    mon.reset_slot(int(slot) * C + c)
+                if cfg.policy == "optimistic":
+                    # optimistic-concurrency conflict: an UNCONTROLLED
+                    # failure (paper: "the system will let one of the
+                    # two fail")
+                    oom_failed_this_tick.append(gid)
+                else:
+                    preempted_this_tick.append(gid)
+                    res.full_preemptions += 1
+            for slot, c in zip(*np.nonzero(kill_comp)):
+                if cl.slot_gid[slot] >= 0 and cl.comp_running[slot, c]:
+                    cl.kill_component(int(slot), int(c))
+                    usage[slot, c] = 0.0
+                    mon.reset_slot(int(slot) * C + int(c))
+                    res.partial_preemptions += 1
+            live = cl.comp_running
+            cl.alloc[:, :, CPU] = np.where(live, alloc_cpu, 0.0)
+            cl.alloc[:, :, MEM] = np.where(live, alloc_mem, 0.0)
+
+        # 5. OOM (uncontrolled failures) -----------------------------------
+        oom_gids, oom_partial = cl.resolve_oom(wl, usage)
+        for gid in oom_gids:
+            oom_failed_this_tick.append(gid)
+            res.oom_kills += 1
+        res.partial_preemptions += len(oom_partial)
+        for slot, c in oom_partial:
+            mon.reset_slot(slot * C + c)
+
+        for gid in oom_failed_this_tick:
+            res.record_failure(gid)
+        for gid in oom_failed_this_tick + preempted_this_tick:
+            requeue(gid)
+
+        # 6. scheduler: FIFO admission + elastic re-placement --------------
+        while queue:
+            _, gid = queue[0]
+            slot = cl.admit(gid, wl, t)
+            if slot < 0:
+                break
+            queue.pop(0)
+            if not cfg.work_lost_on_kill and gid in saved_work:
+                cl.work_done[slot] = saved_work.pop(gid)  # resume from ckpt
+            for c in range(C):
+                mon.reset_slot(slot * C + c)
+        cl.place_missing_elastic(wl, t)
+
+        # 7. metrics -------------------------------------------------------
+        res.record_tick(t, cl, usage)
+
+    res.finalize(t)
+    return res

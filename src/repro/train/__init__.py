@@ -1,0 +1,6 @@
+"""Training substrate: losses + jit-able train steps per family."""
+from repro.train.step import (TrainConfig, cross_entropy, make_train_step,
+                              train_step_fn, whisper_step_fn)
+
+__all__ = ["TrainConfig", "cross_entropy", "make_train_step",
+           "train_step_fn", "whisper_step_fn"]

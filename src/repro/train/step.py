@@ -1,0 +1,102 @@
+"""Train steps: causal-LM and encoder-decoder, microbatch-accumulating.
+
+``train_step_fn(params, opt_state, batch)`` is the function the dry-run
+lowers: forward (scan-over-layers, remat policy from the ModelConfig),
+vocab-parallel cross-entropy, backward, AdamW.  Gradient accumulation
+over ``microbatches`` uses a ``lax.scan`` so the HLO stays compact and
+XLA overlaps the per-microbatch grad reduce with the next microbatch's
+backward (latency hiding at the pjit level).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models import whisper as W
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_update
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optim: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    aux_weight: float = 0.01      # MoE load-balance loss weight
+    z_weight: float = 1e-4        # z-loss (logit drift control)
+
+
+def cross_entropy(logits: Array, labels: Array,
+                  z_weight: float = 0.0) -> Array:
+    """Mean token CE; computed in fp32 on (possibly vocab-sharded) logits."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    ce = (lse - gold).mean()
+    if z_weight:
+        ce = ce + z_weight * (lse ** 2).mean()
+    return ce
+
+
+def _lm_loss(params, cfg: ModelConfig, tc: TrainConfig, batch):
+    logits, _, aux = T.forward(
+        params, cfg, tokens=batch["tokens"],
+        img_embeds=batch.get("img_embeds"))
+    loss = cross_entropy(logits, batch["labels"], tc.z_weight)
+    return loss + tc.aux_weight * aux, loss
+
+
+def _whisper_loss(params, cfg: ModelConfig, tc: TrainConfig, batch):
+    enc = W.encode(params, batch["frames"], cfg)
+    logits, _ = W.decode(params, batch["dec_tokens"], enc, cfg)
+    loss = cross_entropy(logits, batch["dec_labels"], tc.z_weight)
+    return loss, loss
+
+
+def _split_micro(batch, n: int):
+    return jax.tree.map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def _make_step(loss_fn):
+    def step(params, opt_state, batch, *, cfg: ModelConfig,
+             tc: TrainConfig):
+        grad_fn = jax.grad(lambda p, b: loss_fn(p, cfg, tc, b),
+                           has_aux=True)
+        if tc.microbatches > 1:
+            micro = _split_micro(batch, tc.microbatches)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                g, l = grad_fn(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                acc, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / tc.microbatches, grads)
+            loss = loss / tc.microbatches
+        else:
+            grads, loss = grad_fn(params, batch)
+        new_params, new_opt, stats = adamw_update(
+            grads, opt_state, params, tc.optim)
+        stats = dict(stats, loss=loss)
+        return new_params, new_opt, stats
+
+    return step
+
+
+train_step_fn = _make_step(_lm_loss)
+whisper_step_fn = _make_step(_whisper_loss)
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    fn = whisper_step_fn if cfg.encdec else train_step_fn
+    return functools.partial(fn, cfg=cfg, tc=tc)

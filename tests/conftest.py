@@ -1,0 +1,5 @@
+import os
+
+# tests see the single real CPU device — the 512-device override belongs
+# EXCLUSIVELY to the dry-run (src/repro/launch/dryrun.py)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

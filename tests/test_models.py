@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests (reduced configs, full code paths) +
+decode/teacher-forced consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ARCHS, get_config
+from repro.models import transformer as T
+from repro.models import whisper as W
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _lm_inputs(cfg, b=2, s=32):
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    img = (jax.random.normal(KEY, (b, cfg.n_img_tokens, cfg.d_model))
+           if cfg.family == "vlm" else None)
+    return toks, img
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    if cfg.family == "audio":
+        params = W.init_whisper(KEY, cfg)
+        frames = jax.random.normal(KEY, (2, 32, cfg.d_model))
+        enc = W.encode(params, frames, cfg)
+        logits, _ = W.decode(params, jnp.zeros((2, cfg.dec_len), jnp.int32),
+                             enc, cfg)
+        assert logits.shape == (2, cfg.dec_len, cfg.vocab)
+    else:
+        params = T.init_lm(KEY, cfg)
+        toks, img = _lm_inputs(cfg)
+        logits, _, aux = T.forward(params, cfg, tokens=toks, img_embeds=img)
+        assert logits.shape == (2, 32, cfg.vocab)
+        assert np.isfinite(float(aux))
+    assert np.isfinite(np.float32(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    from repro.optim import adamw_init
+    from repro.train import TrainConfig, make_train_step
+    cfg = get_config(arch, smoke=True)
+    key = KEY
+    if cfg.family == "audio":
+        params = W.init_whisper(key, cfg)
+        batch = {
+            "frames": jax.random.normal(key, (2, 16, cfg.d_model)),
+            "dec_tokens": jnp.zeros((2, cfg.dec_len), jnp.int32),
+            "dec_labels": jnp.ones((2, cfg.dec_len), jnp.int32),
+        }
+    else:
+        params = T.init_lm(key, cfg)
+        batch = {"tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab),
+                 "labels": jax.random.randint(key, (2, 32), 0, cfg.vocab)}
+        if cfg.family == "vlm":
+            batch["img_embeds"] = jax.random.normal(
+                key, (2, cfg.n_img_tokens, cfg.d_model))
+    step = jax.jit(make_train_step(cfg, TrainConfig()))
+    p, o, stats = step(params, adamw_init(params), batch)
+    assert np.isfinite(float(stats["loss"]))
+    assert np.isfinite(float(stats["grad_norm"]))
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                         p, params)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "olmoe-1b-7b", "hymba-1.5b",
+                                  "xlstm-1.3b"])
+def test_incremental_decode_matches_full(arch):
+    """KV caches / SSM states / mLSTM states reproduce the teacher-forced
+    forward exactly (the serving-correctness contract)."""
+    cfg = get_config(arch, smoke=True)
+    params = T.init_lm(KEY, cfg)
+    toks, _ = _lm_inputs(cfg, b=2, s=16)
+    full, _, _ = T.forward(params, cfg, tokens=toks)
+    caches = T.init_caches(cfg, 2, 32)
+    outs = []
+    for i in range(8):
+        lg, caches, _ = T.forward(params, cfg, tokens=toks[:, i:i + 1],
+                                  caches=caches)
+        outs.append(lg[:, 0])
+    inc = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.float32(inc), np.float32(full[:, :8]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_prefill_matches_full():
+    """Incremental prefill in chunks == one-shot (cache consistency)."""
+    cfg = get_config("granite-3-8b", smoke=True)
+    params = T.init_lm(KEY, cfg)
+    toks, _ = _lm_inputs(cfg, b=2, s=32)
+    full, _, _ = T.forward(params, cfg, tokens=toks)
+    caches = T.init_caches(cfg, 2, 64)
+    parts = []
+    for i in range(0, 32, 8):
+        lg, caches, _ = T.forward(params, cfg, tokens=toks[:, i:i + 8],
+                                  caches=caches)
+        parts.append(lg)
+    np.testing.assert_allclose(np.float32(jnp.concatenate(parts, 1)),
+                               np.float32(full), rtol=2e-4, atol=2e-4)
+
+
+def test_hymba_windowed_vs_global_layers_differ():
+    cfg = get_config("hymba-1.5b", smoke=True)
+    from repro.models.transformer import layer_meta
+    meta = layer_meta(cfg)
+    w = np.asarray(meta["window"])
+    assert w[0] == 0                      # global layer
+    assert (w[1:] > 0).any()              # windowed layers exist
+
+
+def test_moe_aux_loss_balanced_router_is_one():
+    """Switch LB loss == 1.0 for a perfectly uniform router."""
+    from repro.models import moe as M
+    cfg = get_config("olmoe-1b-7b", smoke=True)
+    p = M.init_moe(KEY, cfg)
+    p = dict(p, router=jnp.zeros_like(p["router"]))   # uniform gates
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), cfg.dtype)
+    _, aux = M.moe_block(p, x, cfg)
+    assert float(aux) == pytest.approx(1.0, rel=0.05)
+
+
+def test_vlm_image_tokens_change_output():
+    cfg = get_config("phi-3-vision-4.2b", smoke=True)
+    params = T.init_lm(KEY, cfg)
+    toks, img = _lm_inputs(cfg)
+    l1, _, _ = T.forward(params, cfg, tokens=toks, img_embeds=img)
+    l2, _, _ = T.forward(params, cfg, tokens=toks,
+                         img_embeds=img + 1.0)
+    assert float(jnp.abs(l1 - l2).max()) > 0
+
+
+def test_param_count_approximation():
+    """config.n_params() within 15% of actual init for dense archs."""
+    for arch in ("internlm2-1.8b", "glm4-9b"):
+        cfg = get_config(arch)
+        est = cfg.n_params()
+        # count real params at smoke scale is meaningless; compare FULL
+        # analytic vs eval_shape (no allocation)
+        shapes = jax.eval_shape(
+            lambda: T.init_lm(jax.random.PRNGKey(0), cfg))
+        real = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+        assert abs(est - real) / real < 0.15

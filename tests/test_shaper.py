@@ -1,0 +1,179 @@
+"""Resource-shaper tests: Algorithm 1 semantics + safety invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.shaper import (SafeguardConfig, ShapeProblem, baseline_shape,
+                               beta, optimistic_shape, pessimistic_shape,
+                               shaped_demand)
+
+
+def _problem(host_cpu, host_mem, apps):
+    """apps: list of dicts with comps: (host, cpu, mem, core, alive)."""
+    A = len(apps)
+    C = max(len(a) for a in apps)
+    z = lambda dt: np.zeros((A, C), dt)
+    ex, co = z(bool), z(bool)
+    ho = z(np.int32)
+    cp, me, al = z(np.float32), z(np.float32), z(np.float32)
+    for i, comps in enumerate(apps):
+        for j, (h, c, m, is_core, alive) in enumerate(comps):
+            ex[i, j] = True
+            co[i, j] = is_core
+            ho[i, j] = h
+            cp[i, j], me[i, j], al[i, j] = c, m, alive
+    return ShapeProblem(
+        host_cpu=jnp.asarray(host_cpu, jnp.float32),
+        host_mem=jnp.asarray(host_mem, jnp.float32),
+        app_exists=jnp.ones((A,), bool),
+        app_order=jnp.arange(A),
+        comp_exists=jnp.asarray(ex), comp_core=jnp.asarray(co),
+        comp_host=jnp.asarray(ho), comp_cpu=jnp.asarray(cp),
+        comp_mem=jnp.asarray(me), comp_alive=jnp.asarray(al),
+    )
+
+
+def test_all_fit_nothing_killed():
+    p = _problem([10.0], [100.0],
+                 [[(0, 2, 20, True, 5)], [(0, 2, 20, True, 3)]])
+    d = pessimistic_shape(p)
+    assert not bool(d.kill_app.any()) and not bool(d.kill_comp.any())
+    np.testing.assert_allclose(d.cpu_free, [6.0])
+    np.testing.assert_allclose(d.mem_free, [60.0])
+
+
+def test_core_overflow_evicts_whole_app_fifo_order():
+    # app0 (older) takes 8 cpu; app1 core needs 4 -> evicted
+    p = _problem([10.0], [100.0],
+                 [[(0, 8, 10, True, 5)], [(0, 4, 10, True, 3)]])
+    d = pessimistic_shape(p)
+    assert list(np.asarray(d.kill_app)) == [False, True]
+    # evicted app's allocation is zeroed
+    assert float(d.alloc_cpu[1].sum()) == 0.0
+
+
+def test_elastic_evicted_newest_first():
+    # one app: core 2 + three elastic of 3 cpu each on a 9-cpu host:
+    # core (2) + oldest (3) + middle (3) fit with 1 cpu spare; the
+    # NEWEST (alive=1) hits the exhausted host and is preempted
+    p = _problem([9.0], [100.0],
+                 [[(0, 2, 5, True, 10), (0, 3, 5, False, 9),
+                   (0, 3, 5, False, 8), (0, 3, 5, False, 1)]])
+    d = pessimistic_shape(p)
+    assert not bool(d.kill_app.any())
+    kc = np.asarray(d.kill_comp[0])
+    assert list(kc) == [False, False, False, True]
+
+
+def test_elastic_checked_le_zero_core_lt_zero():
+    """Paper listing: core uses < 0, elastic uses <= 0 (exact fit kills
+    elastic but keeps core)."""
+    p = _problem([4.0], [100.0], [[(0, 4, 10, True, 5)]])
+    d = pessimistic_shape(p)
+    assert not bool(d.kill_app.any())            # core exact fit survives
+    p2 = _problem([4.0], [100.0],
+                  [[(0, 2, 10, True, 5), (0, 2, 10, False, 1)]])
+    d2 = pessimistic_shape(p2)
+    assert bool(d2.kill_comp[0, 1])              # elastic exact fit dies
+
+
+def test_optimistic_kills_on_contention():
+    p = _problem([10.0], [30.0],
+                 [[(0, 2, 20, True, 5)], [(0, 2, 20, True, 3)]])
+    d = optimistic_shape(p)
+    assert int(np.asarray(d.kill_app).sum()) == 1   # one of the two fails
+
+
+def test_baseline_allocates_everything():
+    p = _problem([10.0], [30.0],
+                 [[(0, 2, 20, True, 5)], [(0, 2, 20, True, 3)]])
+    d = baseline_shape(p)
+    assert not bool(d.kill_app.any())
+    assert float(jnp.sum(d.alloc_mem)) == 40.0      # overcommit visible
+
+
+# ----------------------------------------------------------------------
+# safety invariants (hypothesis)
+# ----------------------------------------------------------------------
+
+@st.composite
+def problems(draw):
+    H = draw(st.integers(1, 3))
+    A = draw(st.integers(1, 5))
+    C = draw(st.integers(1, 4))
+    rng = np.random.RandomState(draw(st.integers(0, 10_000)))
+    apps = []
+    for _ in range(A):
+        comps = []
+        n = rng.randint(1, C + 1)
+        for j in range(n):
+            comps.append((rng.randint(0, H),
+                          float(rng.uniform(0.1, 6)),
+                          float(rng.uniform(0.1, 40)),
+                          bool(j == 0 or rng.rand() < 0.4),
+                          float(rng.uniform(0, 100))))
+        apps.append(comps)
+    return _problem([16.0] * H, [64.0] * H, apps)
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=problems())
+def test_pessimistic_never_overcommits(p):
+    d = pessimistic_shape(p)
+    H = p.host_cpu.shape[0]
+    for r, (alloc, cap) in enumerate([(d.alloc_cpu, p.host_cpu),
+                                      (d.alloc_mem, p.host_mem)]):
+        used = np.zeros(H)
+        a = np.asarray(alloc)
+        h = np.asarray(p.comp_host)
+        for i in range(a.shape[0]):
+            for j in range(a.shape[1]):
+                used[h[i, j]] += a[i, j]
+        assert (used <= np.asarray(cap) + 1e-3).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=problems())
+def test_pessimistic_kill_comp_only_elastic(p):
+    d = pessimistic_shape(p)
+    kc = np.asarray(d.kill_comp)
+    core = np.asarray(p.comp_core)
+    assert not (kc & core).any()
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=problems())
+def test_optimistic_post_kill_demand_fits(p):
+    d = optimistic_shape(p)
+    assert (np.asarray(d.cpu_free) >= -1e-3).all()
+    assert (np.asarray(d.mem_free) >= -1e-3).all()
+
+
+# ----------------------------------------------------------------------
+# safeguard buffer (Eq. 9)
+# ----------------------------------------------------------------------
+
+def test_beta_monotonic_in_k1_k2():
+    r, v = jnp.asarray(10.0), jnp.asarray(4.0)
+    b00 = float(beta(r, v, SafeguardConfig(0.0, 0.0)))
+    b10 = float(beta(r, v, SafeguardConfig(0.1, 0.0)))
+    b13 = float(beta(r, v, SafeguardConfig(0.1, 3.0)))
+    assert b00 == 0.0 and b10 == pytest.approx(1.0)
+    assert b13 == pytest.approx(1.0 + 3 * 2.0)
+
+
+def test_shaped_demand_clamped_to_request():
+    d = shaped_demand(jnp.asarray(100.0), jnp.asarray(10.0),
+                      jnp.asarray(25.0), SafeguardConfig(0.05, 3.0))
+    assert float(d) == 10.0      # never exceeds reservation
+    d2 = shaped_demand(jnp.asarray(2.0), jnp.asarray(10.0),
+                       jnp.asarray(0.0), SafeguardConfig(0.05, 0.0))
+    assert float(d2) == pytest.approx(2.5)
+
+
+def test_k1_100pct_degenerates_to_baseline():
+    """Paper: K1 = 100% -> allocation = reservation."""
+    d = shaped_demand(jnp.asarray(1.0), jnp.asarray(10.0),
+                      jnp.asarray(0.0), SafeguardConfig(1.0, 0.0))
+    assert float(d) == 10.0

@@ -1,0 +1,95 @@
+"""Simulator integration tests + conservation invariants."""
+import numpy as np
+import pytest
+
+from repro.core.shaper import SafeguardConfig
+from repro.sim import ClusterConfig, SimConfig, WorkloadConfig, generate, run_sim
+
+WL = WorkloadConfig(n_apps=40, max_components=8, max_runtime=1200.0,
+                    mean_burst_gap=4.0, mean_long_gap=60.0, seed=7)
+CL = ClusterConfig(n_hosts=4, max_running_apps=32)
+
+
+def _run(policy, forecaster, **kw):
+    cfg = SimConfig(cluster=CL, workload=WL, policy=policy,
+                    forecaster=forecaster, max_ticks=4000, **kw)
+    return run_sim(cfg)
+
+
+def test_baseline_completes_everything():
+    r = _run("baseline", "persist")
+    s = r.summary()
+    assert s["completed"] == WL.n_apps
+    assert s["failed_frac"] == 0.0
+    assert s["full_preemptions"] == 0
+    assert np.isfinite(s["turnaround_mean"])
+
+
+def test_turnaround_at_least_runtime():
+    wl = generate(WL)
+    r = _run("baseline", "persist")
+    for gid, ta in r.turnaround.items():
+        assert ta >= wl.runtime[gid] - CL.tick - 1e-3
+
+
+def test_pessimistic_oracle_no_failures():
+    """Paper Fig. 3: oracle + pessimistic -> zero (uncontrolled)
+    application failures."""
+    r = _run("pessimistic", "oracle")
+    s = r.summary()
+    assert s["completed"] == WL.n_apps
+    assert s["failed_frac"] == 0.0
+    assert s["oom_kills"] == 0
+
+
+def test_shaping_reduces_slack():
+    b = _run("baseline", "persist").summary()
+    p = _run("pessimistic", "oracle").summary()
+    assert p["slack_mem_mean"] < b["slack_mem_mean"]
+
+
+def test_workload_reservations_cover_usage():
+    wl = generate(WL)
+    for prog in (0.0, 0.3, 0.7, 1.0):
+        u = wl.usage(np.arange(wl.n_apps),
+                     np.full(wl.n_apps, prog, np.float32))
+        assert (u[:, :, 0] <= wl.cpu_req + 1e-4).all()
+        assert (u[:, :, 1] <= wl.mem_req + 1e-4).all()
+
+
+def test_workload_peak_touches_reservation():
+    wl = generate(WL)
+    peaks = wl.levels.max(axis=2)                    # (N, C, 2)
+    exists = wl.cpu_req > 0
+    assert (peaks[exists][:, 0] > 0.9).all()
+    assert (peaks[exists][:, 1] > 0.9).all()
+
+
+def test_elastic_apps_slow_down_when_preempted():
+    wl = generate(WL)
+    from repro.sim.cluster import Cluster
+    cl = Cluster(CL, wl.max_components)
+    gid = int(np.nonzero(wl.is_elastic)[0][0])
+    slot = cl.admit(gid, wl, 0.0)
+    assert slot >= 0
+    full_rate = cl.progress_rate(wl)[slot]
+    el = [c for c in range(wl.max_components)
+          if wl.cpu_req[gid, c] > 0 and not wl.is_core[gid, c]
+          and cl.comp_running[slot, c]]
+    if el:
+        cl.kill_component(slot, el[0])
+        assert cl.progress_rate(wl)[slot] < full_rate
+
+
+def test_rigid_apps_have_no_elastic():
+    wl = generate(WL)
+    rigid = ~wl.is_elastic
+    assert (wl.n_elastic[rigid] == 0).all()
+
+
+def test_gp_pessimistic_runs_and_completes():
+    r = _run("pessimistic", "gp",
+             safeguard=SafeguardConfig(k1=0.05, k2=1.0))
+    s = r.summary()
+    assert s["completed"] == WL.n_apps
+    assert np.isfinite(s["turnaround_mean"])

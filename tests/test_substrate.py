@@ -1,0 +1,210 @@
+"""Optimizer, data pipeline, checkpoint, fault-tolerance, compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.data import DataConfig, SyntheticStream
+from repro.distributed.compression import (compressed_psum, dequantize_int8,
+                                           ef_compress, quantize_int8)
+from repro.distributed.fault import (HeartbeatTracker, RestartLedger,
+                                     StragglerDetector)
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ----------------------------------------------------------------------
+# optimizer
+# ----------------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.3, weight_decay=0.0, warmup_steps=0,
+                      total_steps=100, min_lr_frac=1.0)
+    for _ in range(100):
+        grads = jax.tree.map(lambda w: 2 * w, params)
+        params, state, _ = adamw_update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_grad_clipping_caps_update():
+    params = {"w": jnp.zeros((4,))}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0,
+                      warmup_steps=0, min_lr_frac=1.0)
+    grads = {"w": jnp.full((4,), 1e6)}
+    _, _, stats = adamw_update(grads, state, params, cfg)
+    assert float(stats["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    lrs = [float(cosine_schedule(cfg, jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0            # warmup rises
+    assert lrs[99] == pytest.approx(0.1, abs=0.02)
+
+
+def test_microbatch_equivalence():
+    """grad accumulation over 2 microbatches == single big batch."""
+    from repro.models import get_config
+    from repro.models import transformer as T
+    from repro.train import TrainConfig, make_train_step
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    params = T.init_lm(KEY, cfg)
+    batch = {"tokens": jax.random.randint(KEY, (4, 16), 0, cfg.vocab),
+             "labels": jax.random.randint(KEY, (4, 16), 0, cfg.vocab)}
+    opt = adamw_init(params)
+    p1, _, s1 = make_train_step(cfg, TrainConfig(microbatches=1))(
+        params, opt, batch)
+    p2, _, s2 = make_train_step(cfg, TrainConfig(microbatches=2))(
+        params, opt, batch)
+    assert float(s1["loss"]) == pytest.approx(float(s2["loss"]), rel=1e-4)
+    diff = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        p1, p2)))
+    assert diff < 5e-3
+
+
+# ----------------------------------------------------------------------
+# data
+# ----------------------------------------------------------------------
+
+def test_data_deterministic_and_sharded():
+    cfg = DataConfig(vocab=1000, seq_len=32, global_batch=8, seed=3)
+    s = SyntheticStream(cfg)
+    b1, b2 = s.batch(5), s.batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(s.batch(6)["tokens"], b1["tokens"])
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+    assert b1["tokens"].max() < 1000 and b1["tokens"].min() >= 0
+
+
+def test_data_prefetch_order():
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=2)
+    s = SyntheticStream(cfg)
+    got = list(s.prefetch(4))
+    for i, b in enumerate(got):
+        np.testing.assert_array_equal(b["tokens"], s.batch(i)["tokens"])
+
+
+# ----------------------------------------------------------------------
+# checkpoint
+# ----------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": jnp.asarray(7, jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(t, str(tmp_path / "ck"))
+    r = load_pytree(t, str(tmp_path / "ck"))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    save_pytree(_tree(), str(tmp_path / "ck"))
+    assert not os.path.exists(str(tmp_path / "ck.tmp"))
+
+
+def test_manager_keep_and_latest(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30):
+        m.save(s, _tree())
+    assert m.steps() == [20, 30]
+    assert m.latest() == 30
+    restored, step = m.restore(_tree())
+    assert step == 30
+
+
+def test_manager_async(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    m.save_async(5, _tree())
+    m.wait()
+    assert m.latest() == 5
+
+
+def test_elastic_reshard_roundtrip(tmp_path):
+    """checkpoint -> host -> new mesh placement preserves values."""
+    from repro.distributed.elastic import reshard, to_host
+    from repro.launch.mesh import make_host_mesh
+    t = {"wq": jnp.ones((8, 16)), "wo": jnp.ones((16, 8))}
+    host = to_host(t)
+    mesh = make_host_mesh()
+    r = reshard(host, mesh)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------------------
+# fault tolerance
+# ----------------------------------------------------------------------
+
+def test_heartbeat_deadline():
+    hb = HeartbeatTracker(deadline_s=10.0)
+    hb.beat(0, now=100.0)
+    hb.beat(1, now=105.0)
+    assert hb.dead_hosts(now=112.0) == [0]
+    assert hb.alive(now=112.0) == [1]
+
+
+def test_straggler_detection():
+    sd = StragglerDetector(alpha=1.0, threshold=1.5)
+    for h in range(4):
+        sd.record(h, 1.0)
+    sd.record(3, 10.0)
+    assert sd.stragglers() == [3]
+
+
+def test_restart_ledger_replay(tmp_path):
+    led = RestartLedger(str(tmp_path / "ledger.jsonl"))
+    led.record("checkpoint_committed", step=100)
+    led.record("host_failed", host=3)
+    led.record("checkpoint_committed", step=200)
+    assert led.last_committed_step() == 200
+    assert len(led.replay()) == 3
+
+
+# ----------------------------------------------------------------------
+# gradient compression
+# ----------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(KEY, (256,)) * 3
+    q, scale = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, scale) - x).max()
+    assert float(err) <= float(scale) / 2 + 1e-6
+
+
+def test_error_feedback_identity():
+    """q*scale + residual exactly reconstructs the EF target."""
+    x = jax.random.normal(KEY, (64,))
+    res0 = jnp.zeros_like(x)
+    q, scale, res1 = ef_compress(x, res0)
+    np.testing.assert_allclose(dequantize_int8(q, scale) + res1, x,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_compressed_psum_single_device():
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("pod",))
+    x = jax.random.normal(KEY, (32,))
+    res = jnp.zeros_like(x)
+
+    def f(x, r):
+        return compressed_psum(x, r, "pod")
+
+    out, new_res = jax.shard_map(f, mesh=mesh, in_specs=(P(), P()),
+                                 out_specs=(P(), P()))(x, res)
+    np.testing.assert_allclose(out + new_res, x, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,87 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline claims, asserted at CI scale:
+  1. dynamic shaping beats the reservation baseline on turnaround+slack
+     under saturation (paper Figs. 3/5);
+  2. the pessimistic policy never produces uncontrolled failures with an
+     oracle, while the optimistic policy does (paper §4.2);
+  3. the live training driver trains (loss drops), checkpoints, resumes;
+  4. the serving driver completes all requests under a shaper-governed
+     batch cap.
+"""
+import numpy as np
+import pytest
+
+from repro.sim import ClusterConfig, SimConfig, WorkloadConfig, run_sim
+
+# saturated mini-cluster: queueing pressure makes shaping matter
+WL = WorkloadConfig(n_apps=120, max_components=10, max_runtime=3600.0,
+                    mean_burst_gap=1.0, mean_long_gap=30.0, seed=11)
+CL = ClusterConfig(n_hosts=5, max_running_apps=96)
+
+
+def _run(policy, forecaster):
+    return run_sim(SimConfig(cluster=CL, workload=WL, policy=policy,
+                             forecaster=forecaster, max_ticks=8000)).summary()
+
+
+@pytest.fixture(scope="module")
+def results():
+    return {
+        "baseline": _run("baseline", "persist"),
+        "pessimistic": _run("pessimistic", "oracle"),
+        "optimistic": _run("optimistic", "oracle"),
+    }
+
+
+def test_everything_completes(results):
+    for name, s in results.items():
+        assert s["completed"] == WL.n_apps, name
+
+
+def test_shaping_beats_baseline_turnaround(results):
+    assert (results["pessimistic"]["turnaround_mean"]
+            < results["baseline"]["turnaround_mean"])
+
+
+def test_shaping_beats_baseline_slack(results):
+    assert (results["pessimistic"]["slack_mem_mean"]
+            < results["baseline"]["slack_mem_mean"])
+
+
+def test_pessimistic_zero_failures_optimistic_fails(results):
+    assert results["pessimistic"]["failed_frac"] == 0.0
+    assert results["optimistic"]["failed_frac"] > 0.0
+
+
+def test_pessimistic_beats_optimistic(results):
+    """Paper: 'the pessimistic policy ... is consistently superior'."""
+    assert (results["pessimistic"]["turnaround_mean"]
+            <= results["optimistic"]["turnaround_mean"] * 1.05)
+
+
+def test_train_driver_end_to_end(tmp_path):
+    from repro.launch.train import main
+    out = main(["--arch", "internlm2-1.8b", "--smoke", "--steps", "40",
+                "--batch", "4", "--seq", "64", "--ckpt-every", "20",
+                "--ckpt-dir", str(tmp_path)])
+    assert out["final_loss"] < out["first_loss"]
+
+
+def test_train_driver_resume(tmp_path):
+    from repro.launch.train import main
+    main(["--arch", "internlm2-1.8b", "--smoke", "--steps", "20",
+          "--batch", "4", "--seq", "64", "--ckpt-every", "10",
+          "--ckpt-dir", str(tmp_path)])
+    out = main(["--arch", "internlm2-1.8b", "--smoke", "--steps", "30",
+                "--batch", "4", "--seq", "64", "--ckpt-every", "10",
+                "--ckpt-dir", str(tmp_path), "--resume"])
+    assert np.isfinite(out["final_loss"])
+
+
+def test_serve_driver_end_to_end():
+    from repro.launch.serve import main
+    stats = main(["--arch", "internlm2-1.8b", "--smoke",
+                  "--requests", "12", "--max-batch", "4",
+                  "--prompt-len", "16", "--gen-len", "4"])
+    assert stats["tokens"] == 12 * 4
