@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.forecast import ARIMAForecaster, GPConfig, GPForecaster
-from repro.sim.workload import SEGMENTS, WorkloadConfig, generate
+from repro.sim.workload import WorkloadConfig, generate
 
 
 def utilization_series(n_series: int, length: int, seed: int) -> np.ndarray:

@@ -4,14 +4,18 @@ predictor — slack, turnaround and failure distributions.
 Scaled-down default (the paper: 150k apps x 250 hosts x 10 runs x ~3
 simulated months); same generator family, saturated regime.  --full
 raises the scale.
+
+A thin call into ``repro.sim.sweep``: the (policy, forecaster) pairs are
+one zipped sweep axis, seeds another, and the grid runs thread-pooled
+through the shared jitted forecast cache.  Writes the per-cell metrics to
+``BENCH_sweep.json`` (the CI benchmark artifact).
 """
 from __future__ import annotations
 
-import time
+from repro.sim import ClusterConfig, SimConfig, WorkloadConfig
+from repro.sim.sweep import run_grid
 
-import numpy as np
-
-from repro.sim import ClusterConfig, SimConfig, WorkloadConfig, run_sim
+ARTIFACT = "BENCH_sweep.json"
 
 
 def make_configs(scale: str = "quick"):
@@ -30,30 +34,26 @@ def make_configs(scale: str = "quick"):
     return wl, cl, runs
 
 
-def run(scale: str = "quick") -> list[dict]:
+def run(scale: str = "quick", out_path: str | None = ARTIFACT) -> list[dict]:
     wl, cl, runs = make_configs(scale)
+    base = SimConfig(cluster=cl, workload=wl, max_ticks=30_000)
+    res = run_grid(
+        base,
+        axes={("policy", "forecaster"): [("baseline", "persist"),
+                                         ("optimistic", "oracle"),
+                                         ("pessimistic", "oracle")]},
+        seeds=range(1, runs + 1),
+        expect_completed=True,
+        out_path=out_path)
     rows = []
-    for policy, fc in (("baseline", "persist"), ("optimistic", "oracle"),
-                       ("pessimistic", "oracle")):
-        tas, slacks, fails = [], [], []
-        t0 = time.time()
-        for seed in range(runs):
-            import dataclasses
-            wls = dataclasses.replace(wl, seed=seed + 1)
-            s = run_sim(SimConfig(cluster=cl, workload=wls, policy=policy,
-                                  forecaster=fc, max_ticks=30_000)).summary()
-            assert s["completed"] == wls.n_apps
-            tas.append(s["turnaround_mean"])
-            slacks.append(s["slack_mem_mean"])
-            fails.append(s["failed_frac"])
-        rows.append(dict(policy=policy, forecaster=fc,
-                         turnaround_mean=float(np.mean(tas)),
-                         slack_mem=float(np.mean(slacks)),
-                         failed_frac=float(np.mean(fails)),
-                         wall_s=round(time.time() - t0, 1)))
-    base = rows[0]["turnaround_mean"]
-    for r in rows:
-        r["turnaround_ratio"] = base / r["turnaround_mean"]
+    for a in res.aggregates:
+        rows.append(dict(policy=a["overrides"]["policy"],
+                         forecaster=a["overrides"]["forecaster"],
+                         turnaround_mean=a["turnaround_mean"],
+                         slack_mem=a["slack_mem_mean"],
+                         failed_frac=a["failed_frac"],
+                         turnaround_ratio=a["turnaround_speedup"],
+                         wall_s=a["wall_s"]))
     return rows
 
 
@@ -65,6 +65,7 @@ def main(quick: bool = True) -> None:
         print(f"{r['policy']},{r['turnaround_mean']:.0f},"
               f"{r['turnaround_ratio']:.2f},{r['slack_mem']:.3f},"
               f"{r['failed_frac']:.3f},{r['wall_s']}")
+    print(f"# wrote {ARTIFACT}")
 
 
 if __name__ == "__main__":

@@ -15,7 +15,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.shaper import SafeguardConfig

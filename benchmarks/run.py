@@ -2,12 +2,17 @@
 
   fig2   forecast-error distributions (ARIMA vs GP-Exp vs GP-RBF)
   fig3   oracle-based policy comparison (baseline/optimistic/pessimistic)
+         — a thin repro.sim.sweep grid; writes BENCH_sweep.json
   fig4   K1 x K2 safeguard heat maps (ARIMA + GP)
+         — a thin repro.sim.sweep grid; writes BENCH_sweep_fig4.json
   fig5   prototype: baseline vs dynamic on live training jobs
   kernels  Pallas kernel microbenches
   roofline dry-run-derived roofline table (if dryrun_results.json exists)
 
 ``python -m benchmarks.run [--only SECTION] [--full]``
+
+Arbitrary ad-hoc grids (any policy x forecaster x safeguard x seed cross
+product) run through ``python -m repro.sim.sweep`` directly.
 """
 from __future__ import annotations
 

@@ -28,7 +28,6 @@ do not correct it: it is the phenomenon under study.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -12,6 +12,7 @@ variance estimate; sigma bands are its actionable form).
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +37,7 @@ def beta(request: Array, var: Array, cfg: SafeguardConfig) -> Array:
     return cfg.k1 * request + cfg.k2 * sigma
 
 
+@partial(jax.jit, static_argnames="cfg")
 def shaped_demand(pred_peak: Array, request: Array, var: Array,
                   cfg: SafeguardConfig) -> Array:
     """Allocation target: forecast peak + beta, clamped into (0, request].

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.shmap import no_check_kwargs, shard_map
+
 Array = jax.Array
 
 
@@ -34,9 +36,9 @@ def pipeline_apply(stage_fn, params_stacked, x_micro: Array, *,
     S = mesh.shape[axis]
     M = x_micro.shape[0]
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(P(axis), P()), out_specs=P(),
-             check_vma=False)
+             **no_check_kwargs())
     def run(params, xm):
         params = jax.tree.map(lambda p: p[0], params)   # this stage's slice
         sid = jax.lax.axis_index(axis)

@@ -26,7 +26,6 @@ exactly what makes that cell collective-bound; see EXPERIMENTS.md).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 

@@ -1,0 +1,24 @@
+"""Version-compatible ``shard_map``.
+
+``jax.shard_map`` graduated from ``jax.experimental.shard_map`` (and the
+replication-check kwarg was renamed ``check_rep`` -> ``check_vma``) in
+newer JAX releases; the baked toolchain may sit on either side.  This
+shim resolves the callable and kwarg name once at import.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map  # noqa: F811
+
+_params = inspect.signature(shard_map).parameters
+CHECK_KW = "check_vma" if "check_vma" in _params else "check_rep"
+
+
+def no_check_kwargs() -> dict:
+    """{check_vma/check_rep: False} for the running JAX version."""
+    return {CHECK_KW: False}

@@ -105,6 +105,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         rec["memory"] = {"error": str(e)}
     try:
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):   # jax<=0.4.x: one dict per program
+            ca = ca[0] if ca else {}
         rec["cost"] = {k: float(v) for k, v in ca.items()
                        if isinstance(v, (int, float)) and
                        ("flops" in k or "bytes" in k or k == "utilization")}

@@ -13,7 +13,6 @@ A cell = (arch, shape_name, step kind):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax

@@ -25,7 +25,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
 from repro.core.forecast import GPConfig, GPForecaster

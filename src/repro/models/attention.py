@@ -9,7 +9,6 @@ Three execution paths share one parameter layout:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import NamedTuple
 
 import jax

@@ -18,7 +18,6 @@ Families:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

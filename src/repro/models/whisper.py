@@ -14,7 +14,6 @@ output (DESIGN.md notes the 448-token real-world decoder limit).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

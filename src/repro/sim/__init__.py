@@ -1,8 +1,29 @@
 """Trace-driven discrete-event cluster simulator (paper §4)."""
 from repro.sim.cluster import Cluster, ClusterConfig
 from repro.sim.engine import SimConfig, run_sim
-from repro.sim.metrics import SimResults
+from repro.sim.metrics import SimResults, aggregate_summaries
 from repro.sim.workload import Workload, WorkloadConfig, generate
 
-__all__ = ["Cluster", "ClusterConfig", "SimConfig", "run_sim", "SimResults",
-           "Workload", "WorkloadConfig", "generate"]
+__all__ = ["Cluster", "ClusterConfig", "SimConfig", "run_sim",
+           "run_sim_reference", "SimResults", "aggregate_summaries",
+           "Workload", "WorkloadConfig", "generate",
+           "ForecastBatcher", "SweepCell", "SweepResult", "expand_grid",
+           "run_grid"]
+
+_LAZY = {
+    "run_sim_reference": "repro.sim.engine_ref",
+    "ForecastBatcher": "repro.sim.sweep",
+    "SweepCell": "repro.sim.sweep",
+    "SweepResult": "repro.sim.sweep",
+    "expand_grid": "repro.sim.sweep",
+    "run_grid": "repro.sim.sweep",
+}
+
+
+def __getattr__(name):
+    # lazy so that `python -m repro.sim.sweep` does not re-import the
+    # module it is executing (runpy's sys.modules warning)
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

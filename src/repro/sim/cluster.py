@@ -126,27 +126,38 @@ class Cluster:
         return slot
 
     def place_missing_elastic(self, wl: Workload, t: float) -> int:
-        """Best-effort (re)placement of elastic components at reservation."""
+        """Best-effort (re)placement of elastic components at reservation.
+
+        The (slot, component) candidates are found with one array scan
+        over the slot table; only the usually-tiny set of actually-missing
+        elastic components is walked sequentially (placement is order-
+        dependent: each fit consumes free capacity).  Walk order is
+        row-major (slot asc, component asc) — identical to the seed's
+        nested loops."""
+        gid_safe = np.maximum(self.slot_gid, 0)
+        missing = ((self.slot_gid >= 0)[:, None]
+                   & (wl.cpu_req[gid_safe] > 0)
+                   & ~wl.is_core[gid_safe]
+                   & ~self.comp_running)
+        slots, comps = np.nonzero(missing)
+        if slots.size == 0:
+            return 0
         placed = 0
         free = self.free_resources().copy()
-        for slot in self.running_slots():
+        for slot, c in zip(slots, comps):
             gid = self.slot_gid[slot]
-            for c in range(self.C):
-                if (wl.cpu_req[gid, c] == 0 or wl.is_core[gid, c]
-                        or self.comp_running[slot, c]):
-                    continue
-                h = self._fit_component(free, wl.cpu_req[gid, c],
-                                        wl.mem_req[gid, c])
-                if h < 0:
-                    continue
-                self.comp_running[slot, c] = True
-                self.comp_host[slot, c] = h
-                self.alloc[slot, c, CPU] = wl.cpu_req[gid, c]
-                self.alloc[slot, c, MEM] = wl.mem_req[gid, c]
-                self.alive_since[slot, c] = t
-                free[h, CPU] -= wl.cpu_req[gid, c]
-                free[h, MEM] -= wl.mem_req[gid, c]
-                placed += 1
+            h = self._fit_component(free, wl.cpu_req[gid, c],
+                                    wl.mem_req[gid, c])
+            if h < 0:
+                continue
+            self.comp_running[slot, c] = True
+            self.comp_host[slot, c] = h
+            self.alloc[slot, c, CPU] = wl.cpu_req[gid, c]
+            self.alloc[slot, c, MEM] = wl.mem_req[gid, c]
+            self.alive_since[slot, c] = t
+            free[h, CPU] -= wl.cpu_req[gid, c]
+            free[h, MEM] -= wl.mem_req[gid, c]
+            placed += 1
         return placed
 
     # ------------------------------------------------------------------
@@ -156,6 +167,11 @@ class Cluster:
         self.comp_running[slot, c] = False
         self.alloc[slot, c] = 0.0
 
+    def kill_components(self, slots: np.ndarray, comps: np.ndarray) -> None:
+        """Batched ``kill_component`` over parallel (slot, comp) arrays."""
+        self.comp_running[slots, comps] = False
+        self.alloc[slots, comps] = 0.0
+
     def evict_app(self, slot: int) -> int:
         gid = int(self.slot_gid[slot])
         self.slot_gid[slot] = -1
@@ -163,6 +179,15 @@ class Cluster:
         self.alloc[slot] = 0.0
         self.work_done[slot] = 0.0
         return gid
+
+    def evict_apps(self, slots: np.ndarray) -> np.ndarray:
+        """Batched ``evict_app``: returns the evicted gids."""
+        gids = self.slot_gid[slots].copy()
+        self.slot_gid[slots] = -1
+        self.comp_running[slots] = False
+        self.alloc[slots] = 0.0
+        self.work_done[slots] = 0.0
+        return gids
 
     # ------------------------------------------------------------------
     # progress & OOM
@@ -206,24 +231,33 @@ class Cluster:
     def resolve_oom(self, wl: Workload, usage: np.ndarray):
         """OS OOM handler: for every over-capacity host, kill components by
         descending (usage - allocation) overage until the host fits.
-        Returns (full_kill_slots, partial_kills [(slot, c)])."""
+        Returns (full_kill_slots, partial_kills [(slot, c)]).
+
+        Each victim selection is one array scan over the slot table
+        (candidate membership, totals and the argmax are NumPy ops); the
+        outer loop runs once per actual kill, i.e. O(events) not
+        O(slots x components) Python iterations.  Victim order matches the
+        seed's ``sort(reverse=True)`` tuple ordering exactly: largest
+        overage first, ties broken by largest slot then largest component
+        (``np.nonzero`` is row-major, so the last tied index wins)."""
         full, partial = [], []
         host_tot = self.host_usage(usage)
         over_hosts = np.nonzero(host_tot[:, MEM] > self.host_cap[:, MEM] + 1e-6)[0]
         for h in over_hosts:
             while True:
-                tot = 0.0
-                cands = []
-                for slot in self.running_slots():
-                    on_h = self.comp_running[slot] & (self.comp_host[slot] == h)
-                    for c in np.nonzero(on_h)[0]:
-                        tot += usage[slot, c, MEM]
-                        cands.append((usage[slot, c, MEM]
-                                      - self.alloc[slot, c, MEM], slot, int(c)))
-                if tot <= self.host_cap[h, MEM] + 1e-6 or not cands:
+                on_h = self.comp_running & (self.comp_host == h)
+                mem = usage[:, :, MEM]
+                vals = mem[on_h]
+                # sequential float32 accumulation in row-major order —
+                # bit-identical to the seed loop's `tot += usage[...]`
+                # (NEP-50: 0.0 + float32 stays float32); a pairwise or
+                # float64 sum can flip the near-capacity stop condition
+                tot = vals.cumsum(dtype=np.float32)[-1] if vals.size else 0.0
+                if tot <= self.host_cap[h, MEM] + 1e-6 or not vals.size:
                     break
-                cands.sort(reverse=True)
-                _, slot, c = cands[0]
+                over = np.where(on_h, mem - self.alloc[:, :, MEM], -np.inf)
+                cand_s, cand_c = np.nonzero(over == over.max())
+                slot, c = int(cand_s[-1]), int(cand_c[-1])
                 gid = int(self.slot_gid[slot])
                 if wl.is_core[gid, c]:
                     usage[slot] = 0.0

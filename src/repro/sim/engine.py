@@ -19,12 +19,28 @@ Per tick:
 
 Forecast + shaping run as jitted, vmapped JAX on fixed-size padded
 batches — identical code paths to the live framework's shaper service.
+
+This is the VECTORIZED engine: every per-tick scan (completion detection,
+kill/evict application, monitor resets, OOM candidate selection) is a
+NumPy array op over the padded slot table instead of a Python loop over
+slots, so one tick costs O(array-op).  ``repro.sim.engine_ref`` keeps the
+original loop-based implementation as a golden reference; the two are
+bit-identical on any workload (``tests/test_sweep.py``).
+
+The jitted forecast path is cached at module level keyed by
+(model, horizon, batch bucket, window width), so every sim in a process —
+in particular every cell of a ``repro.sim.sweep`` grid — shares one
+compilation per shape instead of recompiling per ``run_sim`` call.
+``run_sim(..., forecast_fn=...)`` lets the sweep driver swap in a
+cross-sim batching client that stacks windows from all concurrently
+running sims into one padded batch (row-deterministic, hence still
+bit-identical to a solo run).
 """
 from __future__ import annotations
 
 import bisect
 import dataclasses
-from functools import partial
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -63,30 +79,29 @@ def _bucket(n: int) -> int:
     return b
 
 
-class _BatchedForecaster:
-    """Caches jitted batched forecast fns per (kind, bucket size)."""
+def _make_model(cfg: SimConfig):
+    if cfg.forecaster == "gp":
+        return GPForecaster(cfg.gp)
+    if cfg.forecaster == "arima":
+        return ARIMAForecaster(cfg.arima)
+    if cfg.forecaster in ("persist", "oracle"):
+        return None
+    raise ValueError(f"unknown forecaster {cfg.forecaster!r} "
+                     "(expected oracle | gp | arima | persist)")
 
-    def __init__(self, cfg: SimConfig):
-        self.cfg = cfg
-        self._jitted = {}
-        if cfg.forecaster == "gp":
-            self._model = GPForecaster(cfg.gp)
-        elif cfg.forecaster == "arima":
-            self._model = ARIMAForecaster(cfg.arima)
-        else:
-            self._model = None
 
-    def __call__(self, windows: np.ndarray, valid: np.ndarray):
-        """windows: (n, W) -> (peak_mean, peak_var) each (n,)."""
-        cfg = self.cfg
-        n = windows.shape[0]
-        if cfg.forecaster == "persist":
-            mean = windows[:, -1]
-            var = windows.var(axis=1, where=valid) + 1e-6
-            return mean, var
-        b = _bucket(n)
-        if b not in self._jitted:
-            model, horizon = self._model, cfg.horizon
+# process-wide jit cache: (model, horizon, bucket, window-width) -> fn.
+# Models are frozen dataclasses, so two sweep cells with the same
+# forecaster config hash to the same compiled function.
+_JIT_CACHE: dict = {}
+_JIT_LOCK = threading.Lock()
+
+
+def _jitted_peak_forecast(model, horizon: int, b: int, width: int):
+    key = (model, horizon, b, width)
+    with _JIT_LOCK:
+        fn = _JIT_CACHE.get(key)
+        if fn is None:
 
             @jax.jit
             def fn(w, v):
@@ -98,12 +113,40 @@ class _BatchedForecaster:
                 pvar = jnp.take_along_axis(fc.var, k[:, None], 1)[:, 0]
                 return peak, pvar
 
-            self._jitted[b] = fn
-        wpad = np.zeros((b, windows.shape[1]), np.float32)
-        vpad = np.zeros((b, windows.shape[1]), bool)
-        wpad[:n], vpad[:n] = windows, valid
-        peak, pvar = self._jitted[b](jnp.asarray(wpad), jnp.asarray(vpad))
-        return np.asarray(peak)[:n], np.asarray(pvar)[:n]
+            _JIT_CACHE[key] = fn
+    return fn
+
+
+def forecast_peaks(model, horizon: int, windows: np.ndarray,
+                   valid: np.ndarray):
+    """Pad (n, W) windows to a power-of-two bucket and run the shared
+    jitted peak forecast.  Row i's result depends only on row i (verified
+    bit-identical across bucket sizes), so callers may freely stack
+    windows from many sims into one call."""
+    n, width = windows.shape
+    b = _bucket(n)
+    fn = _jitted_peak_forecast(model, horizon, b, width)
+    wpad = np.zeros((b, width), np.float32)
+    vpad = np.zeros((b, width), bool)
+    wpad[:n], vpad[:n] = windows, valid
+    peak, pvar = fn(jnp.asarray(wpad), jnp.asarray(vpad))
+    return np.asarray(peak)[:n], np.asarray(pvar)[:n]
+
+
+class _BatchedForecaster:
+    """Per-sim forecast client over the process-wide jit cache."""
+
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self._model = _make_model(cfg)
+
+    def __call__(self, windows: np.ndarray, valid: np.ndarray):
+        """windows: (n, W) -> (peak_mean, peak_var) each (n,)."""
+        if self.cfg.forecaster == "persist":
+            mean = windows[:, -1]
+            var = windows.var(axis=1, where=valid) + 1e-6
+            return mean, var
+        return forecast_peaks(self._model, self.cfg.horizon, windows, valid)
 
 
 def _oracle_peaks(cluster: Cluster, wl: Workload, horizon: int,
@@ -126,16 +169,108 @@ def _oracle_peaks(cluster: Cluster, wl: Workload, horizon: int,
     return out
 
 
-def run_sim(cfg: SimConfig, wl: Workload | None = None) -> SimResults:
+def _shaped_demand_padded(peak: np.ndarray, req: np.ndarray,
+                          var: np.ndarray, sg: SafeguardConfig) -> np.ndarray:
+    """``shaped_demand`` over a leading axis padded to a power-of-two
+    bucket, so the jitted elementwise kernel compiles O(log n) times per
+    safeguard config instead of once per distinct tick batch size.  The
+    op is row-independent, so padding cannot change the real rows."""
+    n = peak.shape[0]
+    b = _bucket(n)
+    if b == n:
+        return np.asarray(shaped_demand(peak, req, var, sg))
+
+    def pad(a):
+        z = np.zeros((b,) + a.shape[1:], a.dtype)
+        z[:n] = a
+        return z
+
+    return np.asarray(shaped_demand(pad(peak), pad(req), pad(var), sg))[:n]
+
+
+def _shape_decisions(cfg: SimConfig, cl: Cluster, wl: Workload, mon: Monitor,
+                     fc, policy_fn, submit0: np.ndarray, run: np.ndarray,
+                     t: float, tick: float):
+    """Forecast -> safeguard -> Algorithm 1 for one tick (shared by the
+    vectorized and reference engines).  Returns numpy
+    (kill_app, kill_comp, alloc_cpu, alloc_mem)."""
+    A, C = cl.A, cl.C
+    gids = cl.slot_gid[run]
+    req = np.stack([wl.cpu_req[gids], wl.mem_req[gids]], -1)  # (n,C,2)
+    running = cl.comp_running[run]
+    demand = np.where(running[:, :, None], req, 0.0).astype(np.float32)
+
+    if cfg.forecaster == "oracle":
+        # perfect information needs no training history: the grace
+        # period (paper §5) exists only for statistical models
+        peaks = _oracle_peaks(cl, wl, cfg.horizon, tick)[run]
+        var = np.zeros_like(peaks)
+        ready = running
+        shaped = _shaped_demand_padded(peaks, req, var, cfg.safeguard)
+        demand = np.where(ready[:, :, None], shaped, demand)
+    else:
+        rc = np.nonzero(running)
+        mslots = run[rc[0]] * C + rc[1]
+        ready = mon.ready(mslots, cfg.grace)
+        if ready.any():
+            sel = np.nonzero(ready)[0]
+            wins, vmask = mon.windows(mslots[sel])
+            n = sel.size
+            wflat = np.concatenate([wins[:, :, CPU], wins[:, :, MEM]])
+            vflat = np.concatenate([vmask, vmask])
+            mean, var = fc(wflat, vflat)
+            reqs = req[rc[0][sel], rc[1][sel]]     # (n, 2)
+            for r, off in ((CPU, 0), (MEM, n)):
+                sh = _shaped_demand_padded(
+                    mean[off:off + n], reqs[:, r], var[off:off + n],
+                    cfg.safeguard)
+                demand[rc[0][sel], rc[1][sel], r] = sh
+
+    # build the fixed-size ShapeProblem over ALL slots
+    dem_full = np.zeros((A, C, 2), np.float32)
+    dem_full[run] = demand
+    app_exists = cl.slot_gid >= 0
+    order = np.full((A,), -1, np.int64)
+    fifo = np.argsort(submit0[np.maximum(cl.slot_gid, 0)]
+                      + np.where(app_exists, 0, 1e18))
+    order[:run.size] = fifo[:run.size]
+    prob = ShapeProblem(
+        host_cpu=jnp.asarray(cl.host_cap[:, CPU]),
+        host_mem=jnp.asarray(cl.host_cap[:, MEM]),
+        app_exists=jnp.asarray(app_exists),
+        app_order=jnp.asarray(order),
+        comp_exists=jnp.asarray(cl.comp_running),
+        comp_core=jnp.asarray(
+            wl.is_core[np.maximum(cl.slot_gid, 0)]
+            & app_exists[:, None]),
+        comp_host=jnp.asarray(cl.comp_host),
+        comp_cpu=jnp.asarray(dem_full[:, :, CPU]),
+        comp_mem=jnp.asarray(dem_full[:, :, MEM]),
+        comp_alive=jnp.asarray(t - cl.alive_since),
+    )
+    dec = policy_fn(prob)
+    return (np.asarray(dec.kill_app), np.asarray(dec.kill_comp),
+            np.asarray(dec.alloc_cpu), np.asarray(dec.alloc_mem))
+
+
+def run_sim(cfg: SimConfig, wl: Workload | None = None, *,
+            forecast_fn=None) -> SimResults:
+    """Run one simulation to completion (vectorized engine).
+
+    ``forecast_fn(windows, valid) -> (mean, var)`` overrides the default
+    per-process forecast client — the sweep driver passes a cross-sim
+    batching client here.
+    """
     wl = wl if wl is not None else generate(cfg.workload)
     N, C = wl.n_apps, wl.max_components
     cl = Cluster(cfg.cluster, C)
     A = cl.A
     mon = Monitor(slots=A * C, window=cfg.window)
-    fc = _BatchedForecaster(cfg)
+    fc = forecast_fn if forecast_fn is not None else _BatchedForecaster(cfg)
     policy_fn = POLICIES[cfg.policy]
     res = SimResults(n_apps=N)
     tick = cfg.cluster.tick
+    all_comps = np.arange(C)[None, :]     # broadcast helper for mon resets
 
     queue: list[tuple[float, int]] = []   # (original submit, gid) sorted
     arrived = 0
@@ -160,18 +295,17 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None) -> SimResults:
             requeue(arrived)
             arrived += 1
 
-        # 2. progress + completions --------------------------------------
+        # 2. progress + completions (array scan over the slot table) ------
         rate = cl.progress_rate(wl)
         cl.work_done += rate * tick
-        for slot in cl.running_slots():
-            gid = int(cl.slot_gid[slot])
-            if cl.work_done[slot] >= wl.runtime[gid]:
-                for c in range(C):
-                    if cl.comp_running[slot, c]:
-                        mon.reset_slot(slot * C + c)
-                cl.evict_app(slot)
-                done[gid] = True
-                res.record_completion(gid, submit0[gid], t)
+        run = cl.running_slots()
+        fin = run[cl.work_done[run] >= wl.runtime[cl.slot_gid[run]]]
+        if fin.size:
+            mon.reset_slot((fin[:, None] * C + all_comps).ravel())
+            fin_gids = cl.evict_apps(fin)
+            done[fin_gids] = True
+            for gid in fin_gids:
+                res.record_completion(int(gid), submit0[gid], t)
 
         # 3. monitor sampling --------------------------------------------
         usage = cl.usage_now(wl)
@@ -188,91 +322,33 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None) -> SimResults:
         preempted_this_tick: list[int] = []
         oom_failed_this_tick: list[int] = []
         if cfg.policy != "baseline" and run.size:
-            gids = cl.slot_gid[run]
-            req = np.stack([wl.cpu_req[gids], wl.mem_req[gids]], -1)  # (n,C,2)
-            running = cl.comp_running[run]
-            demand = np.where(running[:, :, None], req, 0.0).astype(np.float32)
+            kill_app, kill_comp, alloc_cpu, alloc_mem = _shape_decisions(
+                cfg, cl, wl, mon, fc, policy_fn, submit0, run, t, tick)
 
-            if cfg.forecaster == "oracle":
-                # perfect information needs no training history: the grace
-                # period (paper §5) exists only for statistical models
-                peaks = _oracle_peaks(cl, wl, cfg.horizon, tick)[run]
-                var = np.zeros_like(peaks)
-                ready = running
-                shaped = np.asarray(shaped_demand(
-                    jnp.asarray(peaks), jnp.asarray(req), jnp.asarray(var),
-                    cfg.safeguard))
-                demand = np.where(ready[:, :, None], shaped, demand)
-            else:
-                rc = np.nonzero(running)
-                mslots = run[rc[0]] * C + rc[1]
-                ready = mon.ready(mslots, cfg.grace)
-                if ready.any():
-                    sel = np.nonzero(ready)[0]
-                    wins, vmask = mon.windows(mslots[sel])
-                    n = sel.size
-                    wflat = np.concatenate([wins[:, :, CPU], wins[:, :, MEM]])
-                    vflat = np.concatenate([vmask, vmask])
-                    mean, var = fc(wflat, vflat)
-                    reqs = req[rc[0][sel], rc[1][sel]]     # (n, 2)
-                    for r, off in ((CPU, 0), (MEM, n)):
-                        sh = np.asarray(shaped_demand(
-                            jnp.asarray(mean[off:off + n]),
-                            jnp.asarray(reqs[:, r]),
-                            jnp.asarray(var[off:off + n]),
-                            cfg.safeguard))
-                        demand[rc[0][sel], rc[1][sel], r] = sh
-
-            # build the fixed-size ShapeProblem over ALL slots
-            dem_full = np.zeros((A, C, 2), np.float32)
-            dem_full[run] = demand
-            app_exists = cl.slot_gid >= 0
-            order = np.full((A,), -1, np.int64)
-            fifo = np.argsort(submit0[np.maximum(cl.slot_gid, 0)]
-                              + np.where(app_exists, 0, 1e18))
-            order[:run.size] = fifo[:run.size]
-            prob = ShapeProblem(
-                host_cpu=jnp.asarray(cl.host_cap[:, CPU]),
-                host_mem=jnp.asarray(cl.host_cap[:, MEM]),
-                app_exists=jnp.asarray(app_exists),
-                app_order=jnp.asarray(order),
-                comp_exists=jnp.asarray(cl.comp_running),
-                comp_core=jnp.asarray(
-                    wl.is_core[np.maximum(cl.slot_gid, 0)]
-                    & app_exists[:, None]),
-                comp_host=jnp.asarray(cl.comp_host),
-                comp_cpu=jnp.asarray(dem_full[:, :, CPU]),
-                comp_mem=jnp.asarray(dem_full[:, :, MEM]),
-                comp_alive=jnp.asarray(t - cl.alive_since),
-            )
-            dec = policy_fn(prob)
-            kill_app = np.asarray(dec.kill_app)
-            kill_comp = np.asarray(dec.kill_comp)
-            alloc_cpu = np.asarray(dec.alloc_cpu)
-            alloc_mem = np.asarray(dec.alloc_mem)
-
-            for slot in np.nonzero(kill_app & app_exists)[0]:
+            kills = np.nonzero(kill_app & (cl.slot_gid >= 0))[0]
+            if kills.size:
                 if not cfg.work_lost_on_kill:
-                    gid0 = int(cl.slot_gid[slot])
-                    saved_work[gid0] = float(cl.work_done[slot])
-                gid = cl.evict_app(int(slot))
-                usage[slot] = 0.0
-                for c in range(C):
-                    mon.reset_slot(int(slot) * C + c)
+                    for gid0, wd in zip(cl.slot_gid[kills],
+                                        cl.work_done[kills]):
+                        saved_work[int(gid0)] = float(wd)
+                kgids = cl.evict_apps(kills)
+                usage[kills] = 0.0
+                mon.reset_slot((kills[:, None] * C + all_comps).ravel())
                 if cfg.policy == "optimistic":
                     # optimistic-concurrency conflict: an UNCONTROLLED
                     # failure (paper: "the system will let one of the
                     # two fail")
-                    oom_failed_this_tick.append(gid)
+                    oom_failed_this_tick.extend(int(g) for g in kgids)
                 else:
-                    preempted_this_tick.append(gid)
-                    res.full_preemptions += 1
-            for slot, c in zip(*np.nonzero(kill_comp)):
-                if cl.slot_gid[slot] >= 0 and cl.comp_running[slot, c]:
-                    cl.kill_component(int(slot), int(c))
-                    usage[slot, c] = 0.0
-                    mon.reset_slot(int(slot) * C + int(c))
-                    res.partial_preemptions += 1
+                    preempted_this_tick.extend(int(g) for g in kgids)
+                    res.full_preemptions += kills.size
+            ks, kc = np.nonzero(kill_comp & (cl.slot_gid >= 0)[:, None]
+                                & cl.comp_running)
+            if ks.size:
+                cl.kill_components(ks, kc)
+                usage[ks, kc] = 0.0
+                mon.reset_slot(ks * C + kc)
+                res.partial_preemptions += ks.size
             live = cl.comp_running
             cl.alloc[:, :, CPU] = np.where(live, alloc_cpu, 0.0)
             cl.alloc[:, :, MEM] = np.where(live, alloc_mem, 0.0)
@@ -283,8 +359,9 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None) -> SimResults:
             oom_failed_this_tick.append(gid)
             res.oom_kills += 1
         res.partial_preemptions += len(oom_partial)
-        for slot, c in oom_partial:
-            mon.reset_slot(slot * C + c)
+        if oom_partial:
+            parr = np.asarray(oom_partial, np.int64)
+            mon.reset_slot(parr[:, 0] * C + parr[:, 1])
 
         for gid in oom_failed_this_tick:
             res.record_failure(gid)
@@ -300,8 +377,7 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None) -> SimResults:
             queue.pop(0)
             if not cfg.work_lost_on_kill and gid in saved_work:
                 cl.work_done[slot] = saved_work.pop(gid)  # resume from ckpt
-            for c in range(C):
-                mon.reset_slot(slot * C + c)
+            mon.reset_slot(slot * C + np.arange(C))
         cl.place_missing_elastic(wl, t)
 
         # 7. metrics -------------------------------------------------------

@@ -1,0 +1,294 @@
+"""Reference (seed) simulation engine — per-tick Python loops.
+
+This preserves the seed implementation of ``run_sim`` as a golden
+reference: the vectorized engine in ``repro.sim.engine`` must produce
+bit-identical ``SimResults`` on any workload (``tests/test_sweep.py``
+enforces it).  It is O(slots) Python iterations per tick and therefore
+slow — use it only for equivalence checks and debugging
+(``sweep.run_grid(..., engine="reference")``).
+
+Everything the vectorized refactor touched is *inlined* here — the
+loop-based OOM handler and elastic-placement scan that used to live on
+``Cluster``, and the per-tick forecast -> safeguard -> Algorithm 1
+shaping step — so the reference stays frozen and independent even as
+``engine.py`` and ``cluster.py`` evolve.  Only the paper's math itself
+(forecasters, ``shaped_demand``, the shaping policies) is shared, by
+design: those are the exact modules the live framework runs.
+"""
+from __future__ import annotations
+
+import bisect
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.monitor import Monitor
+from repro.core.shaper import POLICIES, SafeguardConfig, ShapeProblem, shaped_demand
+from repro.sim.cluster import CPU, MEM, Cluster
+from repro.sim.engine import SimConfig, _BatchedForecaster, _oracle_peaks
+from repro.sim.metrics import SimResults
+from repro.sim.workload import Workload, generate
+
+
+def _bucket_ref(n: int) -> int:
+    b = 64
+    while b < n:
+        b *= 2
+    return b
+
+
+def _shaped_demand_padded_ref(peak: np.ndarray, req: np.ndarray,
+                              var: np.ndarray, sg: SafeguardConfig) -> np.ndarray:
+    """Frozen copy of the engine's bucket-padded ``shaped_demand`` call."""
+    n = peak.shape[0]
+    b = _bucket_ref(n)
+    if b == n:
+        return np.asarray(shaped_demand(peak, req, var, sg))
+
+    def pad(a):
+        z = np.zeros((b,) + a.shape[1:], a.dtype)
+        z[:n] = a
+        return z
+
+    return np.asarray(shaped_demand(pad(peak), pad(req), pad(var), sg))[:n]
+
+
+def _shape_decisions_reference(cfg: SimConfig, cl: Cluster, wl: Workload,
+                               mon: Monitor, fc, policy_fn,
+                               submit0: np.ndarray, run: np.ndarray,
+                               t: float, tick: float):
+    """Frozen copy of the per-tick shaping step (forecast -> safeguard ->
+    Algorithm 1).  Kept separate from ``engine._shape_decisions`` so a
+    future regression there cannot shift both engines identically and
+    slip past the equivalence tests."""
+    A, C = cl.A, cl.C
+    gids = cl.slot_gid[run]
+    req = np.stack([wl.cpu_req[gids], wl.mem_req[gids]], -1)  # (n,C,2)
+    running = cl.comp_running[run]
+    demand = np.where(running[:, :, None], req, 0.0).astype(np.float32)
+
+    if cfg.forecaster == "oracle":
+        peaks = _oracle_peaks(cl, wl, cfg.horizon, tick)[run]
+        var = np.zeros_like(peaks)
+        ready = running
+        shaped = _shaped_demand_padded_ref(peaks, req, var, cfg.safeguard)
+        demand = np.where(ready[:, :, None], shaped, demand)
+    else:
+        rc = np.nonzero(running)
+        mslots = run[rc[0]] * C + rc[1]
+        ready = mon.ready(mslots, cfg.grace)
+        if ready.any():
+            sel = np.nonzero(ready)[0]
+            wins, vmask = mon.windows(mslots[sel])
+            n = sel.size
+            wflat = np.concatenate([wins[:, :, CPU], wins[:, :, MEM]])
+            vflat = np.concatenate([vmask, vmask])
+            mean, var = fc(wflat, vflat)
+            reqs = req[rc[0][sel], rc[1][sel]]     # (n, 2)
+            for r, off in ((CPU, 0), (MEM, n)):
+                sh = _shaped_demand_padded_ref(
+                    mean[off:off + n], reqs[:, r], var[off:off + n],
+                    cfg.safeguard)
+                demand[rc[0][sel], rc[1][sel], r] = sh
+
+    dem_full = np.zeros((A, C, 2), np.float32)
+    dem_full[run] = demand
+    app_exists = cl.slot_gid >= 0
+    order = np.full((A,), -1, np.int64)
+    fifo = np.argsort(submit0[np.maximum(cl.slot_gid, 0)]
+                      + np.where(app_exists, 0, 1e18))
+    order[:run.size] = fifo[:run.size]
+    prob = ShapeProblem(
+        host_cpu=jnp.asarray(cl.host_cap[:, CPU]),
+        host_mem=jnp.asarray(cl.host_cap[:, MEM]),
+        app_exists=jnp.asarray(app_exists),
+        app_order=jnp.asarray(order),
+        comp_exists=jnp.asarray(cl.comp_running),
+        comp_core=jnp.asarray(
+            wl.is_core[np.maximum(cl.slot_gid, 0)]
+            & app_exists[:, None]),
+        comp_host=jnp.asarray(cl.comp_host),
+        comp_cpu=jnp.asarray(dem_full[:, :, CPU]),
+        comp_mem=jnp.asarray(dem_full[:, :, MEM]),
+        comp_alive=jnp.asarray(t - cl.alive_since),
+    )
+    dec = policy_fn(prob)
+    return (np.asarray(dec.kill_app), np.asarray(dec.kill_comp),
+            np.asarray(dec.alloc_cpu), np.asarray(dec.alloc_mem))
+
+
+def _resolve_oom_reference(cl: Cluster, wl: Workload, usage: np.ndarray):
+    """Seed OOM handler: nested Python scans over slots x components."""
+    full, partial = [], []
+    host_tot = cl.host_usage(usage)
+    over_hosts = np.nonzero(host_tot[:, MEM] > cl.host_cap[:, MEM] + 1e-6)[0]
+    for h in over_hosts:
+        while True:
+            tot = 0.0
+            cands = []
+            for slot in cl.running_slots():
+                on_h = cl.comp_running[slot] & (cl.comp_host[slot] == h)
+                for c in np.nonzero(on_h)[0]:
+                    tot += usage[slot, c, MEM]
+                    cands.append((usage[slot, c, MEM]
+                                  - cl.alloc[slot, c, MEM], slot, int(c)))
+            if tot <= cl.host_cap[h, MEM] + 1e-6 or not cands:
+                break
+            cands.sort(reverse=True)
+            _, slot, c = cands[0]
+            gid = int(cl.slot_gid[slot])
+            if wl.is_core[gid, c]:
+                usage[slot] = 0.0
+                cl.evict_app(slot)
+                full.append(gid)
+            else:
+                usage[slot, c] = 0.0
+                cl.kill_component(slot, c)
+                partial.append((slot, c))
+    return full, partial
+
+
+def _place_missing_elastic_reference(cl: Cluster, wl: Workload,
+                                     t: float) -> int:
+    """Seed elastic re-placement: Python loop over slots x components."""
+    placed = 0
+    free = cl.free_resources().copy()
+    for slot in cl.running_slots():
+        gid = cl.slot_gid[slot]
+        for c in range(cl.C):
+            if (wl.cpu_req[gid, c] == 0 or wl.is_core[gid, c]
+                    or cl.comp_running[slot, c]):
+                continue
+            h = cl._fit_component(free, wl.cpu_req[gid, c],
+                                  wl.mem_req[gid, c])
+            if h < 0:
+                continue
+            cl.comp_running[slot, c] = True
+            cl.comp_host[slot, c] = h
+            cl.alloc[slot, c, CPU] = wl.cpu_req[gid, c]
+            cl.alloc[slot, c, MEM] = wl.mem_req[gid, c]
+            cl.alive_since[slot, c] = t
+            free[h, CPU] -= wl.cpu_req[gid, c]
+            free[h, MEM] -= wl.mem_req[gid, c]
+            placed += 1
+    return placed
+
+
+def run_sim_reference(cfg: SimConfig, wl: Workload | None = None, *,
+                      forecast_fn=None) -> SimResults:
+    """Seed ``run_sim`` — one Python iteration per slot per tick."""
+    wl = wl if wl is not None else generate(cfg.workload)
+    N, C = wl.n_apps, wl.max_components
+    cl = Cluster(cfg.cluster, C)
+    A = cl.A
+    mon = Monitor(slots=A * C, window=cfg.window)
+    fc = forecast_fn if forecast_fn is not None else _BatchedForecaster(cfg)
+    policy_fn = POLICIES[cfg.policy]
+    res = SimResults(n_apps=N)
+    tick = cfg.cluster.tick
+
+    queue: list[tuple[float, int]] = []   # (original submit, gid) sorted
+    arrived = 0
+    done = np.zeros((N,), bool)
+    submit0 = wl.submit.copy()            # original submit (priority key)
+    saved_work: dict[int, float] = {}
+
+    def requeue(gid: int):
+        bisect.insort(queue, (float(submit0[gid]), gid))
+
+    t = 0.0
+    for step in range(cfg.max_ticks):
+        if done.all():
+            break
+        t += tick
+
+        # 1. arrivals ---------------------------------------------------
+        while arrived < N and wl.submit[arrived] <= t:
+            requeue(arrived)
+            arrived += 1
+
+        # 2. progress + completions --------------------------------------
+        rate = cl.progress_rate(wl)
+        cl.work_done += rate * tick
+        for slot in cl.running_slots():
+            gid = int(cl.slot_gid[slot])
+            if cl.work_done[slot] >= wl.runtime[gid]:
+                for c in range(C):
+                    if cl.comp_running[slot, c]:
+                        mon.reset_slot(slot * C + c)
+                cl.evict_app(slot)
+                done[gid] = True
+                res.record_completion(gid, submit0[gid], t)
+
+        # 3. monitor sampling --------------------------------------------
+        usage = cl.usage_now(wl)
+        run = cl.running_slots()
+        if run.size:
+            rc = np.nonzero(cl.comp_running[run])  # (slot_i, c)
+            mslots = run[rc[0]] * C + rc[1]
+            mon.record(mslots, usage[run][rc][:, CPU], usage[run][rc][:, MEM])
+
+        # 4. shaping ------------------------------------------------------
+        preempted_this_tick: list[int] = []
+        oom_failed_this_tick: list[int] = []
+        if cfg.policy != "baseline" and run.size:
+            kill_app, kill_comp, alloc_cpu, alloc_mem = \
+                _shape_decisions_reference(
+                    cfg, cl, wl, mon, fc, policy_fn, submit0, run, t, tick)
+            app_exists = cl.slot_gid >= 0
+
+            for slot in np.nonzero(kill_app & app_exists)[0]:
+                if not cfg.work_lost_on_kill:
+                    gid0 = int(cl.slot_gid[slot])
+                    saved_work[gid0] = float(cl.work_done[slot])
+                gid = cl.evict_app(int(slot))
+                usage[slot] = 0.0
+                for c in range(C):
+                    mon.reset_slot(int(slot) * C + c)
+                if cfg.policy == "optimistic":
+                    oom_failed_this_tick.append(gid)
+                else:
+                    preempted_this_tick.append(gid)
+                    res.full_preemptions += 1
+            for slot, c in zip(*np.nonzero(kill_comp)):
+                if cl.slot_gid[slot] >= 0 and cl.comp_running[slot, c]:
+                    cl.kill_component(int(slot), int(c))
+                    usage[slot, c] = 0.0
+                    mon.reset_slot(int(slot) * C + int(c))
+                    res.partial_preemptions += 1
+            live = cl.comp_running
+            cl.alloc[:, :, CPU] = np.where(live, alloc_cpu, 0.0)
+            cl.alloc[:, :, MEM] = np.where(live, alloc_mem, 0.0)
+
+        # 5. OOM (uncontrolled failures) -----------------------------------
+        oom_gids, oom_partial = _resolve_oom_reference(cl, wl, usage)
+        for gid in oom_gids:
+            oom_failed_this_tick.append(gid)
+            res.oom_kills += 1
+        res.partial_preemptions += len(oom_partial)
+        for slot, c in oom_partial:
+            mon.reset_slot(slot * C + c)
+
+        for gid in oom_failed_this_tick:
+            res.record_failure(gid)
+        for gid in oom_failed_this_tick + preempted_this_tick:
+            requeue(gid)
+
+        # 6. scheduler: FIFO admission + elastic re-placement --------------
+        while queue:
+            _, gid = queue[0]
+            slot = cl.admit(gid, wl, t)
+            if slot < 0:
+                break
+            queue.pop(0)
+            if not cfg.work_lost_on_kill and gid in saved_work:
+                cl.work_done[slot] = saved_work.pop(gid)  # resume from ckpt
+            for c in range(C):
+                mon.reset_slot(slot * C + c)
+        _place_missing_elastic_reference(cl, wl, t)
+
+        # 7. metrics -------------------------------------------------------
+        res.record_tick(t, cl, usage)
+
+    res.finalize(t)
+    return res

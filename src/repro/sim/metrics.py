@@ -7,6 +7,26 @@ import numpy as np
 
 CPU, MEM = 0, 1
 
+# summary keys the sweep aggregates across seeds (paper's Fig. 3-4 axes:
+# turnaround, failures, slack / utilization)
+AGGREGATE_KEYS = (
+    "turnaround_mean", "turnaround_median", "turnaround_p95",
+    "slack_cpu_mean", "slack_mem_mean", "util_cpu_mean", "util_mem_mean",
+    "failed_frac", "failure_events", "oom_kills",
+    "full_preemptions", "partial_preemptions", "completed", "sim_hours",
+)
+
+
+def aggregate_summaries(summaries: list[dict],
+                        keys: tuple = AGGREGATE_KEYS) -> dict:
+    """Mean + median of each metric across per-seed ``summary()`` dicts."""
+    out: dict = {"n_seeds": len(summaries)}
+    for k in keys:
+        vals = np.asarray([s[k] for s in summaries], np.float64)
+        out[k] = float(np.mean(vals))
+        out[k + "_median"] = float(np.median(vals))
+    return out
+
 
 @dataclasses.dataclass
 class SimResults:

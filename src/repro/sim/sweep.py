@@ -1,0 +1,442 @@
+"""Batched experiment sweeps over the simulator (paper Figs. 3-4 grids).
+
+The paper's headline results are *grids* — policy x forecaster x
+safeguard (K1, K2) x seed.  This module makes that scenario space
+enumerable in one process:
+
+  * ``expand_grid``      — cross-product a base ``SimConfig`` with axes
+                           (dotted override paths, zipped tuple axes,
+                           explicit cells) and seeds;
+  * ``ForecastBatcher``  — stacks the forecast windows of all
+                           concurrently running sims into one padded JAX
+                           batch, so the jitted GP/ARIMA path (and its
+                           compilation, via the process-wide cache in
+                           ``repro.sim.engine``) is amortized across the
+                           whole grid.  Rows are independent, so results
+                           are bit-identical to solo runs;
+  * ``run_grid``         — thread-pooled, deterministic-per-seed driver
+                           that runs every cell, aggregates
+                           ``SimResults`` into the paper's metrics
+                           (median turnaround speedup vs baseline,
+                           failure rate, utilization) and writes a
+                           machine-readable ``BENCH_sweep.json``.
+
+CLI::
+
+    python -m repro.sim.sweep --policy baseline,pessimistic \
+        --forecaster persist,oracle --seeds 2 --out BENCH_sweep.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import itertools
+import json
+import os
+import threading
+import time
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from repro.sim.cluster import ClusterConfig
+from repro.sim.engine import (SimConfig, _BatchedForecaster, _make_model,
+                              forecast_peaks, run_sim)
+from repro.sim.metrics import aggregate_summaries
+from repro.sim.workload import WorkloadConfig, generate
+
+__all__ = ["SweepCell", "SweepResult", "ForecastBatcher", "expand_grid",
+           "run_grid", "quick_base_config", "main"]
+
+
+# ----------------------------------------------------------------------
+# grid expansion
+# ----------------------------------------------------------------------
+
+def _set_path(cfg: Any, path: str, value: Any) -> Any:
+    """Functional update of a dotted field path on nested frozen
+    dataclasses, e.g. ``_set_path(cfg, "safeguard.k1", 0.25)``."""
+    head, _, rest = path.partition(".")
+    if rest:
+        return dataclasses.replace(
+            cfg, **{head: _set_path(getattr(cfg, head), rest, value)})
+    return dataclasses.replace(cfg, **{head: value})
+
+
+def _apply_overrides(cfg: SimConfig, overrides: Mapping[str, Any]) -> SimConfig:
+    for path, value in overrides.items():
+        cfg = _set_path(cfg, path, value)
+    return cfg
+
+
+def _cell_name(overrides: Mapping[str, Any]) -> str:
+    return ",".join(f"{k}={v}" for k, v in overrides.items()) or "base"
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCell:
+    """One (configuration, seed) point of the grid."""
+
+    name: str                  # combo label, shared across seeds
+    overrides: dict            # dotted-path -> value, applied to the base
+    seed: int
+    cfg: SimConfig             # fully resolved (overrides + seed applied)
+
+
+def expand_grid(base: SimConfig,
+                axes: Mapping[Any, Sequence[Any]] | None = None,
+                seeds: Sequence[int] | None = None,
+                cells: Sequence[Mapping[str, Any]] | None = None
+                ) -> list[SweepCell]:
+    """Cross product of ``axes`` (plus explicit ``cells``) x ``seeds``.
+
+    ``axes`` maps an override path to its values.  A key may also be a
+    tuple of paths whose values are tuples, zipped together — e.g.
+    ``{("policy", "forecaster"): [("baseline", "persist"),
+    ("pessimistic", "oracle")]}`` for the paper's paired Fig. 3 axis.
+    ``seeds`` replace ``workload.seed``; ``None`` keeps the base seed.
+    """
+    combos: list[dict] = []
+    axis_items = list((axes or {}).items())
+    keys = [k if isinstance(k, tuple) else (k,) for k, _ in axis_items]
+    for values in itertools.product(*(v for _, v in axis_items)):
+        combo: dict = {}
+        for ks, v in zip(keys, values):
+            vs = v if isinstance(v, tuple) else (v,)
+            if len(ks) != len(vs):
+                raise ValueError(f"axis {ks} expects {len(ks)}-tuples, "
+                                 f"got {v!r}")
+            combo.update(zip(ks, vs))
+        combos.append(combo)
+    combos.extend(dict(c) for c in cells or ())
+
+    out = []
+    for combo in combos:
+        cfg = _apply_overrides(base, combo)
+        for seed in (seeds if seeds is not None else (None,)):
+            scfg = cfg if seed is None else _set_path(
+                cfg, "workload.seed", int(seed))
+            out.append(SweepCell(name=_cell_name(combo), overrides=combo,
+                                 seed=scfg.workload.seed, cfg=scfg))
+    return out
+
+
+# ----------------------------------------------------------------------
+# cross-sim forecast batching
+# ----------------------------------------------------------------------
+
+class _Request:
+    __slots__ = ("windows", "valid", "event", "result")
+
+    def __init__(self, windows: np.ndarray, valid: np.ndarray):
+        self.windows = windows
+        self.valid = valid
+        self.event = threading.Event()
+        self.result = None
+
+
+class ForecastBatcher:
+    """Stacks concurrent forecast requests from many sims into one padded
+    jitted call.
+
+    Sims sharing a forecaster model (same frozen config, horizon, window
+    width) land in the same batch key.  The first requester of a round
+    becomes the leader: it waits until every *registered* sim of that key
+    has a request pending (or ``wait_s`` elapses — a sim in its grace
+    period requests nothing), concatenates the windows, runs ONE padded
+    forecast through the shared jit cache, and distributes the row
+    slices.  Rows are computed independently by the vmapped models, so
+    every sim receives bit-identical values to a solo run.
+    """
+
+    def __init__(self, wait_s: float = 0.002):
+        self._wait_s = wait_s
+        self._cond = threading.Condition()
+        self._pending: dict = {}    # key -> list[_Request] (current round)
+        self._clients: dict = {}    # key -> registered sim count
+        self.batches = 0            # rounds fired (introspection)
+        self.requests = 0           # requests served
+
+    def client(self, cfg: SimConfig):
+        """forecast_fn for ``run_sim`` (None when the cell needs none)."""
+        if cfg.forecaster in ("oracle",):
+            return None
+        if cfg.forecaster == "persist":
+            return _BatchedForecaster(cfg)   # pure NumPy, nothing to batch
+        model = _make_model(cfg)
+        key = (model, cfg.horizon, cfg.window)
+        return _BatcherClient(self, key, model, cfg.horizon)
+
+    # -- internal ------------------------------------------------------
+    def _register(self, key):
+        with self._cond:
+            self._clients[key] = self._clients.get(key, 0) + 1
+
+    def _unregister(self, key):
+        with self._cond:
+            self._clients[key] -= 1
+            self._cond.notify_all()   # a waiting leader may now be complete
+
+    def _forecast(self, key, model, horizon, windows, valid):
+        req = _Request(windows, valid)
+        with self._cond:
+            batch = self._pending.setdefault(key, [])
+            batch.append(req)
+            leader = len(batch) == 1
+            if leader:
+                deadline = time.monotonic() + self._wait_s
+                while len(batch) < self._clients.get(key, 1):
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._cond.wait(remaining)
+                self._pending[key] = []     # next arrival starts a new round
+            else:
+                self._cond.notify_all()
+        if not leader:
+            req.event.wait()
+            if isinstance(req.result, BaseException):
+                raise req.result
+            return req.result
+
+        try:
+            rows = np.cumsum([0] + [r.windows.shape[0] for r in batch])
+            mean, var = forecast_peaks(
+                model, horizon,
+                np.concatenate([r.windows for r in batch]),
+                np.concatenate([r.valid for r in batch]))
+        except BaseException as e:
+            # wake every follower with the failure — a silent leader death
+            # would deadlock their event.wait() and hang the whole sweep
+            for r in batch:
+                if r is not req:
+                    r.result = e
+                    r.event.set()
+            raise
+        with self._cond:
+            self.batches += 1
+            self.requests += len(batch)
+        for r, lo, hi in zip(batch, rows[:-1], rows[1:]):
+            r.result = (mean[lo:hi], var[lo:hi])
+            if r is not req:
+                r.event.set()
+        return req.result
+
+
+class _BatcherClient:
+    """Per-sim handle: forwards forecast calls into the shared batcher."""
+
+    def __init__(self, batcher: ForecastBatcher, key, model, horizon: int):
+        self._batcher = batcher
+        self._key = key
+        self._model = model
+        self._horizon = horizon
+        batcher._register(key)
+
+    def __call__(self, windows: np.ndarray, valid: np.ndarray):
+        return self._batcher._forecast(self._key, self._model,
+                                       self._horizon, windows, valid)
+
+    def close(self):
+        self._batcher._unregister(self._key)
+
+
+# ----------------------------------------------------------------------
+# sweep driver
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SweepResult:
+    cells: list[dict]          # one record per (combo, seed) run
+    aggregates: list[dict]     # one record per combo (across seeds)
+    base: dict                 # base SimConfig snapshot
+    wall_s: float
+    forecast_batches: int = 0
+    forecast_requests: int = 0
+
+    def to_json(self) -> dict:
+        return {
+            "schema": 1,
+            "base": self.base,
+            "cells": self.cells,
+            "aggregates": self.aggregates,
+            "wall_s": self.wall_s,
+            "forecast_batches": self.forecast_batches,
+            "forecast_requests": self.forecast_requests,
+        }
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+
+
+def _aggregate(cells: list[dict]) -> list[dict]:
+    """Group per-seed cell records by combo; add the paper's metrics."""
+    by_name: dict[str, list[dict]] = {}
+    for c in cells:
+        by_name.setdefault(c["name"], []).append(c)
+    aggs = []
+    for name, group in by_name.items():
+        agg = aggregate_summaries([c["summary"] for c in group])
+        aggs.append(dict(name=name, overrides=group[0]["overrides"],
+                         seeds=[c["seed"] for c in group],
+                         wall_s=round(sum(c["wall_s"] for c in group), 2),
+                         **agg))
+    base = [a for a in aggs
+            if a["overrides"].get("policy") == "baseline"]
+    if base:
+        # baseline ignores the forecaster, so multiple baseline combos are
+        # interchangeable — use the first as the speedup denominator
+        b = base[0]
+        for a in aggs:
+            a["turnaround_speedup"] = (b["turnaround_mean"]
+                                       / a["turnaround_mean"])
+            a["turnaround_speedup_median"] = (
+                b["turnaround_mean_median"] / a["turnaround_mean_median"])
+    return aggs
+
+
+def run_grid(base: SimConfig,
+             axes: Mapping[Any, Sequence[Any]] | None = None,
+             seeds: Sequence[int] | None = None,
+             cells: Sequence[Mapping[str, Any]] | None = None,
+             *,
+             workers: int | None = None,
+             engine: str = "vectorized",
+             batch_forecasts: bool = True,
+             out_path: str | None = None,
+             expect_completed: bool = False) -> SweepResult:
+    """Expand and run a sweep grid; aggregate and optionally write JSON.
+
+    Cells run on a thread pool (NumPy/JAX release the GIL in kernels and
+    the forecast batcher needs concurrency to stack windows); each cell
+    is deterministic per seed regardless of scheduling, because forecast
+    rows are computed independently.
+    """
+    from concurrent.futures import ThreadPoolExecutor
+
+    grid = expand_grid(base, axes, seeds, cells)
+    if not grid:
+        raise ValueError("empty sweep grid")
+    if engine == "vectorized":
+        run_fn = run_sim
+    elif engine == "reference":
+        from repro.sim.engine_ref import run_sim_reference
+        run_fn = run_sim_reference
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    batcher = ForecastBatcher() if batch_forecasts else None
+
+    # one workload per unique config: many cells share a (config, seed)
+    # point and the engines never mutate a Workload, so generation happens
+    # once, serially, and the arrays are shared read-only across threads
+    workloads = {cfg: generate(cfg)
+                 for cfg in {cell.cfg.workload for cell in grid}}
+
+    def one(cell: SweepCell) -> dict:
+        t0 = time.time()
+        client = batcher.client(cell.cfg) if batcher else None
+        try:
+            res = run_fn(cell.cfg, workloads[cell.cfg.workload],
+                         forecast_fn=client)
+        finally:
+            if client is not None and hasattr(client, "close"):
+                client.close()
+        s = res.summary()
+        if expect_completed and s["completed"] != s["n_apps"]:
+            raise RuntimeError(
+                f"cell {cell.name} seed {cell.seed}: only {s['completed']}"
+                f"/{s['n_apps']} apps completed (raise max_ticks?)")
+        return dict(name=cell.name, overrides=cell.overrides,
+                    seed=cell.seed, summary=s,
+                    wall_s=round(time.time() - t0, 2))
+
+    t0 = time.time()
+    n_workers = workers or min(len(grid), os.cpu_count() or 4)
+    if n_workers > 1:
+        with ThreadPoolExecutor(max_workers=n_workers) as pool:
+            records = list(pool.map(one, grid))
+    else:
+        records = [one(c) for c in grid]
+
+    result = SweepResult(
+        cells=records, aggregates=_aggregate(records),
+        base=dataclasses.asdict(base), wall_s=round(time.time() - t0, 2),
+        forecast_batches=batcher.batches if batcher else 0,
+        forecast_requests=batcher.requests if batcher else 0)
+    if out_path:
+        result.write(out_path)
+    return result
+
+
+# ----------------------------------------------------------------------
+# CLI
+# ----------------------------------------------------------------------
+
+def quick_base_config(n_apps: int = 64, n_hosts: int = 4,
+                      max_components: int = 8, seed: int = 0) -> SimConfig:
+    """CI-scale base config: saturated little cluster, minutes of load."""
+    return SimConfig(
+        cluster=ClusterConfig(n_hosts=n_hosts, max_running_apps=48),
+        workload=WorkloadConfig(n_apps=n_apps, max_components=max_components,
+                                max_runtime=1800.0, mean_burst_gap=2.0,
+                                mean_long_gap=40.0, seed=seed),
+        max_ticks=20_000)
+
+
+def _csv(kind):
+    return lambda s: [kind(x) for x in s.split(",") if x]
+
+
+def main(argv: Sequence[str] | None = None) -> SweepResult:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.sim.sweep",
+        description="Run a policy x forecaster x safeguard sweep grid.")
+    ap.add_argument("--policy", type=_csv(str),
+                    default=["baseline", "optimistic", "pessimistic"])
+    ap.add_argument("--forecaster", type=_csv(str),
+                    default=["persist", "oracle"],
+                    help="any of: persist,oracle,gp,arima")
+    ap.add_argument("--k1", type=_csv(float), default=None,
+                    help="safeguard K1 axis (e.g. 0.0,0.05,0.25)")
+    ap.add_argument("--k2", type=_csv(float), default=None,
+                    help="safeguard K2 axis (e.g. 0.0,1.0,3.0)")
+    ap.add_argument("--seeds", type=int, default=2,
+                    help="number of workload seeds (0..N-1)")
+    ap.add_argument("--apps", type=int, default=64)
+    ap.add_argument("--hosts", type=int, default=4)
+    ap.add_argument("--components", type=int, default=8)
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--engine", choices=("vectorized", "reference"),
+                    default="vectorized")
+    ap.add_argument("--no-batch", action="store_true",
+                    help="disable cross-sim forecast batching")
+    ap.add_argument("--out", default="BENCH_sweep.json")
+    args = ap.parse_args(argv)
+    if args.seeds < 1:
+        ap.error("--seeds must be >= 1")
+
+    base = quick_base_config(args.apps, args.hosts, args.components)
+    axes: dict = {"policy": args.policy, "forecaster": args.forecaster}
+    if args.k1:
+        axes["safeguard.k1"] = args.k1
+    if args.k2:
+        axes["safeguard.k2"] = args.k2
+    result = run_grid(base, axes, seeds=range(args.seeds),
+                      workers=args.workers, engine=args.engine,
+                      batch_forecasts=not args.no_batch, out_path=args.out)
+
+    print(f"# {len(result.cells)} cells in {result.wall_s:.1f}s "
+          f"({result.forecast_requests} forecast requests in "
+          f"{result.forecast_batches} stacked batches) -> {args.out}")
+    print("combo,seeds,turnaround_mean_s,speedup,failed_frac,util_mem")
+    for a in result.aggregates:
+        speed = a.get("turnaround_speedup", float("nan"))
+        print(f"{a['name']},{a['n_seeds']},{a['turnaround_mean']:.0f},"
+              f"{speed:.2f},{a['failed_frac']:.3f},"
+              f"{a['util_mem_mean']:.3f}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,11 @@
 """Forecasting module tests (paper §3.1): accuracy, uncertainty,
 degenerate inputs, batching."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.core.forecast import (ARIMAForecaster, GPConfig, GPForecaster,
                                  OracleForecaster)

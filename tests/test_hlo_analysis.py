@@ -1,7 +1,6 @@
 """Loop-aware HLO cost analyzer: validated against hand-counted programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.hlo_analysis import analyze
 

@@ -4,7 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.kernels import ops, ref
 

@@ -2,7 +2,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.core.shaper import (SafeguardConfig, ShapeProblem, baseline_shape,
                                beta, optimistic_shape, pessimistic_shape,

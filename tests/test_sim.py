@@ -1,6 +1,5 @@
 """Simulator integration tests + conservation invariants."""
 import numpy as np
-import pytest
 
 from repro.core.shaper import SafeguardConfig
 from repro.sim import ClusterConfig, SimConfig, WorkloadConfig, generate, run_sim

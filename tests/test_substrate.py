@@ -205,6 +205,7 @@ def test_compressed_psum_single_device():
     def f(x, r):
         return compressed_psum(x, r, "pod")
 
-    out, new_res = jax.shard_map(f, mesh=mesh, in_specs=(P(), P()),
-                                 out_specs=(P(), P()))(x, res)
+    from repro.distributed.shmap import shard_map
+    out, new_res = shard_map(f, mesh=mesh, in_specs=(P(), P()),
+                             out_specs=(P(), P()))(x, res)
     np.testing.assert_allclose(out + new_res, x, rtol=1e-5, atol=1e-5)

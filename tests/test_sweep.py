@@ -1,0 +1,190 @@
+"""Sweep subsystem tests: grid expansion, vectorized-engine equivalence,
+solo-vs-sweep bit-identity, artifact schema."""
+import dataclasses
+import itertools
+import json
+
+import numpy as np
+import pytest
+
+from repro.sim import (ClusterConfig, SimConfig, WorkloadConfig, generate,
+                       run_sim, run_sim_reference)
+from repro.sim.sweep import expand_grid, quick_base_config, run_grid
+
+WL = WorkloadConfig(n_apps=40, max_components=8, max_runtime=1200.0,
+                    mean_burst_gap=4.0, mean_long_gap=60.0, seed=7)
+CL = ClusterConfig(n_hosts=4, max_running_apps=32)
+BASE = SimConfig(cluster=CL, workload=WL, max_ticks=4000)
+
+
+def _results_equal(a, b) -> bool:
+    return (a.summary() == b.summary()
+            and a.turnaround == b.turnaround
+            and a.failed_apps == b.failed_apps
+            and a.slack_cpu == b.slack_cpu and a.slack_mem == b.slack_mem
+            and a.util_cpu == b.util_cpu and a.util_mem == b.util_mem
+            and a.n_running == b.n_running)
+
+
+# ----------------------------------------------------------------------
+# grid expansion
+# ----------------------------------------------------------------------
+
+def test_grid_covers_cross_product_exactly_once():
+    axes = {"policy": ["baseline", "pessimistic"],
+            "forecaster": ["persist", "oracle"],
+            "safeguard.k1": [0.0, 0.05, 0.25]}
+    seeds = [0, 1]
+    cells = expand_grid(BASE, axes, seeds)
+    assert len(cells) == 2 * 2 * 3 * 2
+    seen = {(c.cfg.policy, c.cfg.forecaster, c.cfg.safeguard.k1, c.seed)
+            for c in cells}
+    want = set(itertools.product(["baseline", "pessimistic"],
+                                 ["persist", "oracle"],
+                                 [0.0, 0.05, 0.25], seeds))
+    assert seen == want                      # every combo exactly once
+
+
+def test_grid_zipped_axis_and_explicit_cells():
+    cells = expand_grid(
+        BASE,
+        axes={("policy", "forecaster"): [("baseline", "persist"),
+                                         ("pessimistic", "oracle")]},
+        seeds=[3],
+        cells=[{"policy": "optimistic", "forecaster": "oracle"}])
+    combos = [(c.cfg.policy, c.cfg.forecaster) for c in cells]
+    assert combos == [("baseline", "persist"), ("pessimistic", "oracle"),
+                      ("optimistic", "oracle")]
+    assert all(c.cfg.workload.seed == 3 for c in cells)
+
+
+def test_grid_base_seed_kept_when_seeds_none():
+    cells = expand_grid(BASE, {"policy": ["baseline"]}, seeds=None)
+    assert len(cells) == 1 and cells[0].cfg.workload.seed == WL.seed
+
+
+def test_grid_nested_override_leaves_base_untouched():
+    cells = expand_grid(BASE, {"safeguard.k2": [9.0]}, seeds=[0])
+    assert cells[0].cfg.safeguard.k2 == 9.0
+    assert BASE.safeguard.k2 != 9.0
+
+
+# ----------------------------------------------------------------------
+# vectorized engine == seed (reference) engine, bit for bit
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,forecaster", [
+    ("baseline", "persist"),
+    ("pessimistic", "oracle"),
+    ("optimistic", "oracle"),
+    ("pessimistic", "persist"),     # exercises monitor windows + grace
+])
+def test_vectorized_engine_matches_reference(policy, forecaster):
+    cfg = dataclasses.replace(BASE, policy=policy, forecaster=forecaster)
+    wl = generate(cfg.workload)
+    vec = run_sim(cfg, wl)
+    ref = run_sim_reference(cfg, wl)
+    s, r = vec.summary(), ref.summary()
+    # the headline counters the paper plots ...
+    for k in ("completed", "failed_frac", "failure_events", "oom_kills",
+              "full_preemptions", "partial_preemptions"):
+        assert s[k] == r[k], (k, s[k], r[k])
+    # ... and in fact the entire result, bit for bit
+    assert _results_equal(vec, ref)
+
+
+def test_vectorized_engine_matches_reference_checkpoint_mode():
+    cfg = dataclasses.replace(BASE, policy="pessimistic",
+                              forecaster="oracle", work_lost_on_kill=False)
+    wl = generate(cfg.workload)
+    assert _results_equal(run_sim(cfg, wl), run_sim_reference(cfg, wl))
+
+
+# ----------------------------------------------------------------------
+# sweep driver
+# ----------------------------------------------------------------------
+
+def test_sweep_cell_bit_identical_to_solo_run():
+    """Same seed => same SimResults whether a cell runs alone or inside a
+    thread-pooled sweep with cross-sim forecast batching."""
+    base = quick_base_config(n_apps=30, n_hosts=3, seed=0)
+    res = run_grid(base,
+                   axes={"policy": ["baseline", "pessimistic"],
+                         "forecaster": ["persist", "gp"]},
+                   seeds=[0, 1], workers=4)
+    assert len(res.cells) == 8
+    for overrides, seed in (({"policy": "pessimistic", "forecaster": "gp"}, 1),
+                            ({"policy": "baseline", "forecaster": "persist"}, 0)):
+        cell = next(c for c in res.cells
+                    if c["overrides"] == overrides and c["seed"] == seed)
+        cfg = base
+        for k, v in overrides.items():
+            cfg = dataclasses.replace(cfg, **{k: v})
+        cfg = dataclasses.replace(
+            cfg, workload=dataclasses.replace(cfg.workload, seed=seed))
+        assert run_sim(cfg).summary() == cell["summary"]
+
+
+def test_sweep_aggregates_and_artifact(tmp_path):
+    out = tmp_path / "BENCH_sweep.json"
+    base = quick_base_config(n_apps=24, n_hosts=3, seed=0)
+    res = run_grid(base,
+                   axes={"policy": ["baseline", "pessimistic"],
+                         "forecaster": ["oracle"]},
+                   seeds=[0, 1], out_path=str(out))
+    data = json.loads(out.read_text())
+    assert data["schema"] == 1
+    assert len(data["cells"]) == 4 and len(data["aggregates"]) == 2
+    for c in data["cells"]:
+        for key in ("turnaround_mean", "failed_frac", "util_mem_mean"):
+            assert key in c["summary"]
+    by_policy = {a["overrides"]["policy"]: a for a in data["aggregates"]}
+    assert by_policy["baseline"]["turnaround_speedup"] == 1.0
+    assert np.isfinite(by_policy["pessimistic"]["turnaround_speedup"])
+    assert by_policy["pessimistic"]["n_seeds"] == 2
+    # deterministic per seed: rerun reproduces the same summaries
+    res2 = run_grid(base, axes={"policy": ["baseline", "pessimistic"],
+                                "forecaster": ["oracle"]}, seeds=[0, 1])
+    assert [c["summary"] for c in res2.cells] == \
+        [c["summary"] for c in res.cells]
+
+
+def test_batcher_propagates_leader_failure(monkeypatch):
+    """A failing forecast must raise in EVERY participating sim instead of
+    deadlocking followers on their never-set events."""
+    import threading
+
+    from repro.sim import sweep as SW
+
+    monkeypatch.setattr(
+        SW, "forecast_peaks",
+        lambda *a, **k: (_ for _ in ()).throw(RuntimeError("boom")))
+    batcher = SW.ForecastBatcher(wait_s=0.05)
+    cfg = dataclasses.replace(quick_base_config(), forecaster="gp")
+    clients = [batcher.client(cfg) for _ in range(2)]
+    wins = np.zeros((2, cfg.window), np.float32)
+    val = np.ones((2, cfg.window), bool)
+    errs = []
+
+    def call(c):
+        try:
+            c(wins, val)
+        except RuntimeError as e:
+            errs.append(str(e))
+
+    threads = [threading.Thread(target=call, args=(c,)) for c in clients]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10)
+    assert not any(t.is_alive() for t in threads), "batcher deadlocked"
+    assert errs == ["boom", "boom"]
+
+
+def test_sweep_reference_engine_option():
+    base = quick_base_config(n_apps=16, n_hosts=2, seed=0)
+    kw = dict(axes={"policy": ["pessimistic"], "forecaster": ["oracle"]},
+              seeds=[0])
+    vec = run_grid(base, **kw)
+    ref = run_grid(base, engine="reference", **kw)
+    assert vec.cells[0]["summary"] == ref.cells[0]["summary"]
