@@ -11,7 +11,7 @@ failure-prone.
 A thin call into ``repro.sim.sweep``: forecaster x K1 x K2 are sweep
 axes plus one explicit baseline cell; all ARIMA/GP cells share the
 process-wide jitted forecast cache and the cross-sim window batcher.
-Writes ``BENCH_sweep_fig4.json``.
+Writes ``BENCH_fig4.json``.
 """
 from __future__ import annotations
 
@@ -20,7 +20,7 @@ from repro.sim.sweep import run_grid
 
 K1S = (0.0, 0.05, 0.25, 1.0)
 K2S = (0.0, 1.0, 3.0)
-ARTIFACT = "BENCH_sweep_fig4.json"
+ARTIFACT = "BENCH_fig4.json"
 
 
 def make_configs(scale: str = "quick"):

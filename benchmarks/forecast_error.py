@@ -2,11 +2,16 @@
 GP-RBF, history h in {10, 20, 40}.
 
 The paper evaluates on ~6000 memory-usage series from their academic
-cluster; we evaluate on utilization series produced by the same
-generator the simulator uses (Google-trace-shaped, §4.1), one-step-ahead
-rolling forecasts.  Reported: error quartiles per (model, h) — the
-paper's boxplot as numbers — plus mean |z| calibration (error in
-predictive sigmas; >> 1 = over-confidence).
+cluster; we evaluate on utilization series sampled from a scenario's
+ground-truth profiles (default: the Google-trace-shaped family, §4.1),
+one-step-ahead rolling forecasts.  Reported: error quartiles per
+(model, h) — the paper's boxplot as numbers — plus mean |z| calibration
+(error in predictive sigmas; >> 1 = over-confidence).
+
+Series come from ``repro.sim.scenarios.diagnostics`` — the same sampler
+the sweep uses for its per-scenario forecast-error records — so pass
+``scenario="flashcrowd"`` (etc.) to redo Fig. 2 on any registered
+workload family.
 """
 from __future__ import annotations
 
@@ -17,25 +22,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.forecast import ARIMAForecaster, GPConfig, GPForecaster
-from repro.sim.workload import WorkloadConfig, generate
+from repro.sim.scenarios import build_trace, make_config
+from repro.sim.scenarios.diagnostics import sample_usage_series
 
 
-def utilization_series(n_series: int, length: int, seed: int) -> np.ndarray:
-    """Memory-usage series sampled from the simulator's app profiles."""
-    wl = generate(WorkloadConfig(n_apps=max(n_series // 3, 8), seed=seed))
-    rng = np.random.RandomState(seed)
-    out = []
-    while len(out) < n_series:
-        gid = rng.randint(0, wl.n_apps)
-        c = rng.randint(0, wl.max_components)
-        if wl.mem_req[gid, c] == 0:
-            continue
-        prog = np.linspace(0, 1, length, dtype=np.float32)
-        u = wl.usage(np.full(length, gid),
-                     prog)[np.arange(length), c, 1]
-        u = u + rng.normal(0, 0.01 * wl.mem_req[gid, c], length)
-        out.append(u.astype(np.float32))
-    return np.stack(out)
+def utilization_series(n_series: int, length: int, seed: int,
+                       scenario: str = "google") -> np.ndarray:
+    """Memory-usage series sampled from a scenario's app profiles."""
+    cfg = make_config(scenario, n_apps=max(n_series // 3, 8), seed=seed)
+    return sample_usage_series(build_trace(cfg), n_series, length, seed)
 
 
 def rolling_errors(model, series: np.ndarray, window: int,
@@ -59,8 +54,8 @@ def rolling_errors(model, series: np.ndarray, window: int,
 
 
 def run(n_series: int = 60, length: int = 120, n_eval: int = 4,
-        seed: int = 0) -> list[dict]:
-    series = utilization_series(n_series, length, seed)
+        seed: int = 0, scenario: str = "google") -> list[dict]:
+    series = utilization_series(n_series, length, seed, scenario)
     rows = []
     models = []
     for h in (10, 20, 40):

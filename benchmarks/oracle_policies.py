@@ -8,14 +8,15 @@ raises the scale.
 A thin call into ``repro.sim.sweep``: the (policy, forecaster) pairs are
 one zipped sweep axis, seeds another, and the grid runs thread-pooled
 through the shared jitted forecast cache.  Writes the per-cell metrics to
-``BENCH_sweep.json`` (the CI benchmark artifact).
+``BENCH_fig3.json`` (one ``BENCH_<name>.json`` per benchmark section —
+all gitignored, uploaded from CI).
 """
 from __future__ import annotations
 
 from repro.sim import ClusterConfig, SimConfig, WorkloadConfig
 from repro.sim.sweep import run_grid
 
-ARTIFACT = "BENCH_sweep.json"
+ARTIFACT = "BENCH_fig3.json"
 
 
 def make_configs(scale: str = "quick"):

@@ -2,17 +2,21 @@
 
   fig2   forecast-error distributions (ARIMA vs GP-Exp vs GP-RBF)
   fig3   oracle-based policy comparison (baseline/optimistic/pessimistic)
-         — a thin repro.sim.sweep grid; writes BENCH_sweep.json
+         — a thin repro.sim.sweep grid; writes BENCH_fig3.json
   fig4   K1 x K2 safeguard heat maps (ARIMA + GP)
-         — a thin repro.sim.sweep grid; writes BENCH_sweep_fig4.json
+         — a thin repro.sim.sweep grid; writes BENCH_fig4.json
   fig5   prototype: baseline vs dynamic on live training jobs
+  scenarios  cross-scenario robustness grid (every workload family x
+         policy); writes BENCH_scenarios.json
   kernels  Pallas kernel microbenches
   roofline dry-run-derived roofline table (if dryrun_results.json exists)
 
 ``python -m benchmarks.run [--only SECTION] [--full]``
 
-Arbitrary ad-hoc grids (any policy x forecaster x safeguard x seed cross
-product) run through ``python -m repro.sim.sweep`` directly.
+Every section writes at most one ``BENCH_<name>.json`` artifact (all
+gitignored; CI uploads them).  Arbitrary ad-hoc grids — any policy x
+forecaster x safeguard x scenario x seed cross product — run through
+``python -m repro.sim.sweep`` directly.
 """
 from __future__ import annotations
 
@@ -22,7 +26,8 @@ import sys
 import time
 import traceback
 
-SECTIONS = ("fig2", "fig3", "fig4", "fig5", "kernels", "roofline")
+SECTIONS = ("fig2", "fig3", "fig4", "fig5", "scenarios", "kernels",
+            "roofline")
 
 
 def main() -> None:
@@ -51,6 +56,9 @@ def main() -> None:
             elif sec == "fig5":
                 from benchmarks import prototype
                 prototype.main(quick)
+            elif sec == "scenarios":
+                from benchmarks import scenario_sweep
+                scenario_sweep.main(quick)
             elif sec == "kernels":
                 from benchmarks import kernels
                 kernels.main(quick)

@@ -1,0 +1,63 @@
+"""Cross-scenario robustness grid: every workload family x policy.
+
+The paper's Figs. 3-4 hold one workload fixed; this section asks the
+question its related work (Flex, ADARES) treats as table stakes — does
+uncertainty-modulated shaping keep its turnaround/failure/utilization
+profile across workload regimes?  One ``repro.sim.sweep`` grid:
+
+    scenario in {google, diurnal, flashcrowd, heavytail, colocated}
+    x policy in {baseline, pessimistic}  ( + optimistic with --full)
+    x seed
+
+Per-scenario speedups use each scenario's own baseline as denominator;
+the artifact (``BENCH_scenarios.json``) also carries per-scenario trace
+statistics and rolling forecast-error diagnostics, so a regression in
+any regime is attributable from the JSON alone.
+"""
+from __future__ import annotations
+
+from repro.sim import ClusterConfig, SimConfig, WorkloadConfig
+from repro.sim.sweep import run_grid
+
+SCENARIOS = ("google", "diurnal", "flashcrowd", "heavytail", "colocated")
+ARTIFACT = "BENCH_scenarios.json"
+
+
+def run(scale: str = "quick", out_path: str | None = ARTIFACT):
+    if scale == "quick":
+        wl = WorkloadConfig(n_apps=48, max_components=8,
+                            max_runtime=2700.0, mean_burst_gap=2.0,
+                            mean_long_gap=40.0)
+        cl = ClusterConfig(n_hosts=4, max_running_apps=48)
+        policies = ["baseline", "pessimistic"]
+        forecaster, seeds = "persist", [0]
+    else:
+        wl = WorkloadConfig(n_apps=400, max_components=12)
+        cl = ClusterConfig(n_hosts=16, max_running_apps=256)
+        policies = ["baseline", "optimistic", "pessimistic"]
+        forecaster, seeds = "gp", [0, 1, 2]
+    base = SimConfig(cluster=cl, workload=wl, forecaster=forecaster,
+                     max_ticks=60_000)
+    return run_grid(base,
+                    axes={"scenario": list(SCENARIOS),
+                          "policy": policies},
+                    seeds=seeds, out_path=out_path)
+
+
+def main(quick: bool = True) -> None:
+    res = run("quick" if quick else "full")
+    print("scenario,policy,speedup,failed_frac,util_mem,slack_mem")
+    for a in res.aggregates:
+        print(f"{a['scenario']},{a['overrides']['policy']},"
+              f"{a.get('turnaround_speedup', float('nan')):.2f},"
+              f"{a['failed_frac']:.3f},{a['util_mem_mean']:.3f},"
+              f"{a['slack_mem_mean']:.3f}")
+    for d in res.forecast_error:
+        print(f"# forecast_error {d['scenario']}/{d['forecaster']}: "
+              f"median_abs_rel={d['abs_rel_err_median']:.3f} "
+              f"median_|z|={d['median_abs_z']:.2f}")
+    print(f"# wrote {ARTIFACT}")
+
+
+if __name__ == "__main__":
+    main()

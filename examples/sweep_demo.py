@@ -20,11 +20,12 @@ def main() -> None:
     base = quick_base_config(n_apps=48, n_hosts=4)
 
     # 1. the grid: 3 policies x 2 forecasters x 2 seeds = 12 cells ------
+    # no out_path: demos do not leave artifacts behind (BENCH_<name>.json
+    # files are written by benchmarks/run.py sections / the sweep CLI)
     res = run_grid(base,
                    axes={"policy": ["baseline", "optimistic", "pessimistic"],
                          "forecaster": ["persist", "oracle"]},
-                   seeds=[0, 1],
-                   out_path="BENCH_sweep_demo.json")
+                   seeds=[0, 1])
     print(f"{len(res.cells)} cells in {res.wall_s:.1f}s wall "
           f"({res.forecast_requests} forecasts in {res.forecast_batches} "
           f"stacked batches)\n")

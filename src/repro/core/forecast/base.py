@@ -61,5 +61,6 @@ def batched(forecast_fn, windows: Array, horizon: int,
     """vmap a single-series forecast fn over (B, T) windows."""
     if valid is None:
         valid = jnp.ones(windows.shape, dtype=bool)
-    fn = lambda w, v: forecast_fn(w, horizon, valid=v)
+    def fn(w, v):
+        return forecast_fn(w, horizon, valid=v)
     return jax.vmap(fn)(windows, valid)

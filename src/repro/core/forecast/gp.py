@@ -189,5 +189,6 @@ class GPForecaster:
                        valid: Array | None = None) -> Forecast:
         if valid is None:
             valid = jnp.ones(windows.shape, dtype=bool)
-        fn = lambda w, v: self.forecast(w, horizon, valid=v)
+        def fn(w, v):
+            return self.forecast(w, horizon, valid=v)
         return jax.vmap(fn)(windows, valid)

@@ -36,5 +36,6 @@ class OracleForecaster:
 
     def forecast_batch(self, windows: Array, horizon: int, *,
                        valid: Array | None = None) -> Forecast:
-        fn = lambda w: self.forecast(w, horizon)
+        def fn(w):
+            return self.forecast(w, horizon)
         return jax.vmap(fn)(windows)

@@ -94,7 +94,8 @@ def ssm_mixer(p: dict, x: Array, cfg: ModelConfig,
         def step(h, u_ch):
             dA, dBx, Cm = _ssm_params(p, u_ch)
             # prepend carry as a virtual step, associative-scan the chunk
-            op = lambda a, b: (b[0] * a[0], b[0] * a[1] + b[1])
+            def op(a, b):
+                return (b[0] * a[0], b[0] * a[1] + b[1])
             dA_all = jnp.concatenate(
                 [jnp.ones((B, 1, d, cfg.ssm_state)), dA], axis=1)
             dBx_all = jnp.concatenate([h[:, None], dBx], axis=1)

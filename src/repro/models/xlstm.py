@@ -103,8 +103,9 @@ def _mlstm_chunkwise(q, k, v, log_i, log_f, carry, chunk: int):
     """
     B, S, H, dh = q.shape
     nc = S // chunk
-    resh = lambda x: x.reshape(B, nc, chunk, *x.shape[2:]).transpose(
-        1, 0, *range(2, x.ndim + 1))
+    def resh(x):
+        return x.reshape(B, nc, chunk, *x.shape[2:]).transpose(
+            1, 0, *range(2, x.ndim + 1))
     qc, kc, vc = resh(q), resh(k), resh(v)            # (nc,B,Tc,H,dh)
     lic, lfc = resh(log_i), resh(log_f)               # (nc,B,Tc,H)
 
@@ -211,7 +212,8 @@ def init_slstm(key, cfg: ModelConfig) -> dict:
 
 def init_slstm_state(cfg: ModelConfig, batch: int) -> dict:
     d = cfg.d_model
-    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    def z():
+        return jnp.zeros((batch, d), jnp.float32)
     return {"c": z(), "n": z(), "m": jnp.full((batch, d), -1e30, jnp.float32),
             "h": z()}
 
@@ -244,7 +246,8 @@ def slstm_layer(p: dict, x: Array, cfg: ModelConfig,
             jnp.zeros((B, d), jnp.float32))
     else:
         carry = (state["c"], state["n"], state["m"], state["h"])
-    cell = lambda cr, gg: _slstm_cell(p, cr, gg)
+    def cell(cr, gg):
+        return _slstm_cell(p, cr, gg)
     (c, n, m, h_last), hs = jax.lax.scan(cell, carry, g.transpose(1, 0, 2))
     h = hs.transpose(1, 0, 2).astype(x.dtype)
     out = x + L.matmul(h, p["w_out"])

@@ -48,7 +48,8 @@ def global_norm(tree) -> Array:
 
 
 def adamw_init(params) -> dict:
-    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros32(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {
         "mu": jax.tree.map(zeros32, params),
         "nu": jax.tree.map(zeros32, params),

@@ -1,17 +1,26 @@
 """Trace-driven discrete-event cluster simulator (paper §4)."""
 from repro.sim.cluster import Cluster, ClusterConfig
 from repro.sim.engine import SimConfig, run_sim
-from repro.sim.metrics import SimResults, aggregate_summaries
-from repro.sim.workload import Workload, WorkloadConfig, generate
+from repro.sim.metrics import SimResults, aggregate_summaries, trace_stats
+from repro.sim.workload import Trace, Workload, WorkloadConfig, generate
 
 __all__ = ["Cluster", "ClusterConfig", "SimConfig", "run_sim",
            "run_sim_reference", "SimResults", "aggregate_summaries",
-           "Workload", "WorkloadConfig", "generate",
+           "trace_stats",
+           "Trace", "Workload", "WorkloadConfig", "generate",
+           "build_trace", "make_config", "scenario_names", "scenario_of",
+           "load_trace", "save_trace",
            "ForecastBatcher", "SweepCell", "SweepResult", "expand_grid",
            "run_grid"]
 
 _LAZY = {
     "run_sim_reference": "repro.sim.engine_ref",
+    "build_trace": "repro.sim.scenarios",
+    "make_config": "repro.sim.scenarios",
+    "scenario_names": "repro.sim.scenarios",
+    "scenario_of": "repro.sim.scenarios",
+    "load_trace": "repro.sim.scenarios",
+    "save_trace": "repro.sim.scenarios",
     "ForecastBatcher": "repro.sim.sweep",
     "SweepCell": "repro.sim.sweep",
     "SweepResult": "repro.sim.sweep",

@@ -53,7 +53,8 @@ from repro.core.shaper import (POLICIES, SafeguardConfig, ShapeProblem,
                                shaped_demand)
 from repro.sim.cluster import CPU, MEM, Cluster, ClusterConfig
 from repro.sim.metrics import SimResults
-from repro.sim.workload import Workload, WorkloadConfig, generate
+from repro.sim.scenarios.registry import build_trace
+from repro.sim.workload import Workload, WorkloadConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -260,8 +261,13 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None, *,
     ``forecast_fn(windows, valid) -> (mean, var)`` overrides the default
     per-process forecast client — the sweep driver passes a cross-sim
     batching client here.
+
+    ``cfg.workload`` may be ANY registered scenario config (google,
+    diurnal, flashcrowd, heavytail, colocated, replay, ...): the default
+    workload is built through the scenario registry, and the engine
+    consumes the canonical ``Trace`` unchanged.
     """
-    wl = wl if wl is not None else generate(cfg.workload)
+    wl = wl if wl is not None else build_trace(cfg.workload)
     N, C = wl.n_apps, wl.max_components
     cl = Cluster(cfg.cluster, C)
     A = cl.A

@@ -27,7 +27,8 @@ from repro.core.shaper import POLICIES, SafeguardConfig, ShapeProblem, shaped_de
 from repro.sim.cluster import CPU, MEM, Cluster
 from repro.sim.engine import SimConfig, _BatchedForecaster, _oracle_peaks
 from repro.sim.metrics import SimResults
-from repro.sim.workload import Workload, generate
+from repro.sim.scenarios.registry import build_trace
+from repro.sim.workload import Workload
 
 
 def _bucket_ref(n: int) -> int:
@@ -177,7 +178,7 @@ def _place_missing_elastic_reference(cl: Cluster, wl: Workload,
 def run_sim_reference(cfg: SimConfig, wl: Workload | None = None, *,
                       forecast_fn=None) -> SimResults:
     """Seed ``run_sim`` — one Python iteration per slot per tick."""
-    wl = wl if wl is not None else generate(cfg.workload)
+    wl = wl if wl is not None else build_trace(cfg.workload)
     N, C = wl.n_apps, wl.max_components
     cl = Cluster(cfg.cluster, C)
     A = cl.A

@@ -28,6 +28,28 @@ def aggregate_summaries(summaries: list[dict],
     return out
 
 
+def trace_stats(trace) -> dict:
+    """Workload-shape statistics of a Trace — the sweep attaches these
+    per scenario so BENCH artifacts are self-describing (a reader can
+    see WHAT regime produced each metric block)."""
+    exists = trace.cpu_req > 0
+    return {
+        "n_apps": int(trace.n_apps),
+        "max_components": int(trace.max_components),
+        "elastic_frac": float(trace.is_elastic.mean()),
+        "jumpy_frac": float(trace.is_jumpy.mean()),
+        "mean_components": float(exists.sum(1).mean()),
+        "elastic_comp_frac": float((exists & ~trace.is_core).sum()
+                                   / max(exists.sum(), 1)),
+        "runtime_mean_s": float(trace.runtime.mean()),
+        "runtime_p95_s": float(np.percentile(trace.runtime, 95)),
+        "arrival_makespan_h": float(trace.submit[-1] / 3600.0),
+        "mem_req_mean_gb": float(trace.mem_req[exists].mean()),
+        "mem_req_p95_gb": float(np.percentile(trace.mem_req[exists], 95)),
+        "mean_level": float(trace.levels[exists].mean()),
+    }
+
+
 @dataclasses.dataclass
 class SimResults:
     n_apps: int

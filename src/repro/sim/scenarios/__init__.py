@@ -1,0 +1,36 @@
+"""Scenario & trace subsystem: pluggable workload sources for the sim.
+
+One canonical :class:`Trace` schema (``schema``), a named registry of
+generator families (``registry``), four parametric families beyond the
+paper's Google-shaped workload (``families``: diurnal, flashcrowd,
+heavytail, colocated), a CSV/Parquet trace-replay adapter (``replay``)
+and per-scenario forecast-error diagnostics (``diagnostics``).
+
+The legacy generator in :mod:`repro.sim.workload` registers itself as
+the ``"google"`` family — the registry imports it lazily, so either
+import order works.
+
+    from repro.sim.scenarios import build_trace, make_config
+    tr = build_trace(make_config("flashcrowd", n_apps=200, seed=1))
+"""
+from repro.sim.scenarios.schema import (SEGMENTS, Trace,
+                                        TraceValidationError, sort_by_submit)
+from repro.sim.scenarios.registry import (ScenarioSpec, build_trace, get,
+                                          make_config, register,
+                                          scenario_names, scenario_of)
+from repro.sim.scenarios import families as _families              # noqa: F401
+from repro.sim.scenarios import replay as _replay                  # noqa: F401
+from repro.sim.scenarios.families import (ColocatedConfig, DiurnalConfig,
+                                          FlashcrowdConfig, HeavytailConfig)
+from repro.sim.scenarios.replay import ReplayConfig, load_trace, save_trace
+from repro.sim.scenarios.diagnostics import (forecast_error_report,
+                                             sample_usage_series)
+
+__all__ = [
+    "SEGMENTS", "Trace", "TraceValidationError", "sort_by_submit",
+    "ScenarioSpec", "register", "get", "scenario_names", "scenario_of",
+    "make_config", "build_trace",
+    "DiurnalConfig", "FlashcrowdConfig", "HeavytailConfig",
+    "ColocatedConfig", "ReplayConfig", "load_trace", "save_trace",
+    "forecast_error_report", "sample_usage_series",
+]

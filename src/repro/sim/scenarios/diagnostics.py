@@ -1,0 +1,116 @@
+"""Per-scenario diagnostics: sampled utilization series and rolling
+forecast-error reports.
+
+The paper's Fig. 2 evaluates forecast error on ~6000 memory series from
+one cluster; with pluggable scenarios the same question becomes
+per-regime: *how learnable is this workload family for each
+forecaster?*  ``sample_usage_series`` draws component utilization
+series straight from a :class:`Trace`'s ground-truth profiles (the
+exact curves the simulator will realize), and
+``forecast_error_report`` runs batched one-step-ahead rolling
+forecasts over them, returning the error quartiles + |z| calibration
+the sweep attaches to ``BENCH_sweep.json`` next to each scenario's
+paper metrics.
+
+Only :mod:`repro.core.forecast` is imported — no engine dependency, so
+the diagnostics are bit-neutral to simulation results by construction.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim.scenarios.schema import MEM, Trace
+
+__all__ = ["sample_usage_series", "rolling_errors", "forecast_error_report"]
+
+# jitted one-step forecast per model config: jax.jit caches by function
+# identity, so a fresh lambda per call would recompile the whole GP/ARIMA
+# path for every diagnostic record.  Model configs are frozen dataclasses
+# (same keying as the engine's process-wide jit cache).
+_JIT: dict = {}
+
+
+def sample_usage_series(trace: Trace, n_series: int, length: int,
+                        seed: int, resource: int = MEM,
+                        noise: float = 0.01) -> np.ndarray:
+    """(n_series, length) utilization series sampled from the trace's
+    component profiles, full-lifetime, at uniform progress spacing."""
+    rng = np.random.RandomState(seed)
+    req = trace.cpu_req if resource == 0 else trace.mem_req
+    gids, comps = np.nonzero(req > 0)
+    if gids.size == 0:
+        raise ValueError("trace has no components to sample")
+    pick = rng.randint(0, gids.size, n_series)
+    prog = np.linspace(0.0, 1.0, length, dtype=np.float32)
+    out = np.empty((n_series, length), np.float32)
+    for i, k in enumerate(pick):
+        gid, c = gids[k], comps[k]
+        u = trace.usage(np.full(length, gid), prog)[np.arange(length), c,
+                                                    resource]
+        out[i] = u + rng.normal(0.0, noise * req[gid, c], length)
+    return out
+
+
+def _make_model(forecaster: str, gp=None, arima=None):
+    from repro.core.forecast import (ARIMAConfig, ARIMAForecaster, GPConfig,
+                                     GPForecaster)
+    if forecaster == "gp":
+        return GPForecaster(gp or GPConfig())
+    if forecaster == "arima":
+        return ARIMAForecaster(arima or ARIMAConfig())
+    raise ValueError(f"no diagnostic model for forecaster {forecaster!r}")
+
+
+def rolling_errors(forecaster: str, series: np.ndarray, window: int,
+                   n_eval: int, gp=None, arima=None):
+    """Batched one-step-ahead rolling forecasts -> (rel_errors, |z|)."""
+    T = series.shape[1]
+    starts = np.linspace(0, T - window - 1, n_eval).astype(int)
+    wins = np.concatenate([series[:, s:s + window] for s in starts])
+    tgts = np.concatenate([series[:, s + window] for s in starts])
+
+    if forecaster == "persist":
+        mean = wins[:, -1]
+        sd = np.sqrt(wins.var(axis=1) + 1e-6)
+    else:
+        import jax
+        import jax.numpy as jnp
+        model = _make_model(forecaster, gp=gp, arima=arima)
+        fn = _JIT.get(model)
+        if fn is None:
+            fn = _JIT[model] = jax.jit(
+                lambda w, m=model: m.forecast_batch(w, 1))
+        fc = fn(jnp.asarray(wins))
+        mean = np.asarray(fc.mean)[:, 0]
+        sd = np.sqrt(np.maximum(np.asarray(fc.var)[:, 0], 1e-12))
+
+    scale = np.maximum(np.abs(tgts), 1e-3)
+    rel = (mean - tgts) / scale
+    z = np.abs(mean - tgts) / np.maximum(sd, 1e-9)
+    return rel, z
+
+
+def forecast_error_report(trace: Trace, forecaster: str, *,
+                          window: int = 24, n_series: int = 16,
+                          n_eval: int = 4, seed: int = 0,
+                          gp=None, arima=None) -> dict | None:
+    """One forecast-error record for (trace, forecaster); None for
+    forecasters with nothing to diagnose (oracle is error-free)."""
+    if forecaster == "oracle":
+        return None
+    length = window + max(n_eval, 2) + 8
+    series = sample_usage_series(trace, n_series, length, seed)
+    rel, z = rolling_errors(forecaster, series, window, n_eval,
+                            gp=gp, arima=arima)
+    q25, q50, q75 = np.percentile(np.abs(rel), [25, 50, 75])
+    return {
+        "forecaster": forecaster,
+        "n_series": int(n_series),
+        "n_eval": int(n_eval),
+        "window": int(window),
+        "abs_rel_err_q25": float(q25),
+        "abs_rel_err_median": float(q50),
+        "abs_rel_err_q75": float(q75),
+        "abs_rel_err_mean": float(np.abs(rel).mean()),
+        "median_abs_z": float(np.median(z)),
+    }

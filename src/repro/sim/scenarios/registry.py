@@ -1,0 +1,139 @@
+"""Named scenario registry: config class + builder per workload family.
+
+A *scenario* is a frozen config dataclass plus a builder that turns it
+into a schema-valid :class:`~repro.sim.scenarios.schema.Trace`.  Sources
+register under a short name::
+
+    @register("diurnal", DiurnalConfig, doc="tidal day/night service load")
+    def build(cfg: DiurnalConfig) -> Trace: ...
+
+and the sweep's ``scenario`` grid axis, ``make_config`` and
+``build_trace`` dispatch through the registry.  Config classes double as
+the dispatch key, so ``SimConfig.workload`` can hold ANY registered
+scenario config and ``run_sim`` still finds the right builder.
+
+Built-in families load lazily: looking up a name (or a config type)
+that is not registered yet first imports the module known to provide
+it, so ``make_config("google")`` works without the caller importing
+``repro.sim.workload`` explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+from repro.sim.scenarios.schema import Trace
+
+__all__ = ["ScenarioSpec", "register", "get", "scenario_names",
+           "scenario_of", "make_config", "build_trace"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    name: str
+    config_cls: type
+    build: Callable[[Any], Trace]
+    doc: str = ""
+
+
+_SCENARIOS: dict[str, ScenarioSpec] = {}
+_BY_CONFIG: dict[type, ScenarioSpec] = {}
+
+# name -> module that registers it on import (lazy, avoids import cycles:
+# repro.sim.workload itself imports this module)
+_BUILTIN = {
+    "google": "repro.sim.workload",
+    "diurnal": "repro.sim.scenarios.families",
+    "flashcrowd": "repro.sim.scenarios.families",
+    "heavytail": "repro.sim.scenarios.families",
+    "colocated": "repro.sim.scenarios.families",
+    "replay": "repro.sim.scenarios.replay",
+}
+
+
+def register(name: str, config_cls: type, doc: str = ""):
+    """Decorator for a ``build(cfg) -> Trace`` function."""
+    def deco(build_fn):
+        spec = ScenarioSpec(name=name, config_cls=config_cls,
+                            build=build_fn, doc=doc)
+        _SCENARIOS[name] = spec
+        _BY_CONFIG[config_cls] = spec
+        return build_fn
+    return deco
+
+
+def _load_builtins() -> None:
+    for mod in set(_BUILTIN.values()):
+        importlib.import_module(mod)
+
+
+def get(name: str) -> ScenarioSpec:
+    if name not in _SCENARIOS and name in _BUILTIN:
+        importlib.import_module(_BUILTIN[name])
+    try:
+        return _SCENARIOS[name]
+    except KeyError:
+        _load_builtins()
+        if name in _SCENARIOS:
+            return _SCENARIOS[name]
+        raise KeyError(f"unknown scenario {name!r} "
+                       f"(registered: {scenario_names()})") from None
+
+
+def scenario_names() -> tuple[str, ...]:
+    _load_builtins()
+    return tuple(sorted(_SCENARIOS))
+
+
+def scenario_of(cfg: Any) -> str:
+    """Registry name of a scenario config instance."""
+    return _spec_for(cfg).name
+
+
+def _spec_for(cfg: Any) -> ScenarioSpec:
+    spec = _BY_CONFIG.get(type(cfg))
+    if spec is None:
+        _load_builtins()
+        spec = _BY_CONFIG.get(type(cfg))
+    if spec is None:
+        raise TypeError(f"{type(cfg).__name__} is not a registered "
+                        f"scenario config (registered: {scenario_names()})")
+    return spec
+
+
+# the only fields that carry across FAMILIES when the sweep's scenario
+# axis swaps workloads: grid scale and seed.  Shape parameters (runtime
+# ranges, demand ranges, mix fractions) stay family-authentic — carrying
+# a CI-scale google max_runtime into `diurnal` would erase its day-cycle
+# character.
+_CARRY = ("n_apps", "max_components", "seed")
+
+
+def make_config(name: str, base: Any = None, **overrides: Any):
+    """Build the named scenario's config.
+
+    ``base`` may be any other scenario config.  Same family: ``base`` is
+    kept verbatim (plus ``overrides``).  Different family: only the
+    shared scale knobs (``n_apps``, ``max_components``, ``seed``) carry
+    over — this is how the sweep's ``scenario`` axis preserves the grid's
+    scale while switching regimes.  ``overrides`` always win.
+    """
+    spec = get(name)
+    kw: dict[str, Any] = {}
+    if base is not None and type(base) is spec.config_cls:
+        kw = {f.name: getattr(base, f.name)
+              for f in dataclasses.fields(base)}
+    elif base is not None:
+        ours = {f.name for f in dataclasses.fields(spec.config_cls)}
+        base_fields = {f.name for f in dataclasses.fields(base)}
+        for fname in _CARRY:
+            if fname in ours and fname in base_fields:
+                kw[fname] = getattr(base, fname)
+    kw.update(overrides)
+    return spec.config_cls(**kw)
+
+
+def build_trace(cfg: Any) -> Trace:
+    """Dispatch a scenario config to its registered builder."""
+    return _spec_for(cfg).build(cfg)

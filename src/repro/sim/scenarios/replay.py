@@ -1,0 +1,182 @@
+"""Trace replay: ingest real cluster traces (CSV / Parquet) as a Trace.
+
+File format — one row per *component*, grouped by application:
+
+    app_id, submit, runtime, is_elastic, is_jumpy, component, is_core,
+    cpu_req, mem_req, cpu_levels, mem_levels
+
+``cpu_levels`` / ``mem_levels`` are ``;``-joined utilization fractions
+(of the reservation) sampled anywhere along the component's lifetime —
+any length; they are linearly resampled to the engine's ``SEGMENTS``
+knots on load.  This keeps the files rectangular (plain CSV, Parquet,
+or anything pandas reads) while allowing per-trace sampling rates.
+
+CSV round-trips through the stdlib ``csv`` module — no extra
+dependencies.  Parquet requires pandas+pyarrow and degrades to a clear
+error when they are absent (they are NOT a hard dependency of the
+package).
+
+``save_trace`` writes any :class:`Trace` back out in the same format,
+so synthetic scenarios can be exported, edited, and replayed — and the
+round-trip is exact for float32 values.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import os
+
+import numpy as np
+
+from repro.sim.scenarios.registry import register
+from repro.sim.scenarios.schema import CPU, MEM, SEGMENTS, Trace, sort_by_submit
+
+try:
+    import pandas as _pd
+except ImportError:                        # pragma: no cover - env-dependent
+    _pd = None
+
+COLUMNS = ("app_id", "submit", "runtime", "is_elastic", "is_jumpy",
+           "component", "is_core", "cpu_req", "mem_req",
+           "cpu_levels", "mem_levels")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayConfig:
+    """Scenario config for trace replay.
+
+    ``seed`` exists only so the sweep's seed axis applies uniformly to
+    every scenario config; a replayed trace is identical across seeds.
+    ``n_apps`` > 0 truncates to the first N applications (by submission
+    time); ``max_components`` > 0 overrides the inferred component
+    padding (it must cover the widest app).
+    """
+    path: str = ""
+    n_apps: int = 0
+    max_components: int = 0
+    seed: int = 0
+
+
+def _fmt_levels(row: np.ndarray) -> str:
+    # no precision cap: format_float_positional defaults to the unique
+    # shortest repr, which is what makes the round-trip float32-exact
+    return ";".join(np.format_float_positional(v, trim="-") for v in row)
+
+
+def _parse_levels(s: str) -> np.ndarray:
+    vals = np.asarray([float(x) for x in str(s).split(";")], np.float32)
+    if vals.size == SEGMENTS:
+        return vals
+    # linear resample onto the engine's knot grid
+    src = np.linspace(0.0, 1.0, vals.size)
+    dst = np.linspace(0.0, 1.0, SEGMENTS)
+    return np.interp(dst, src, vals).astype(np.float32)
+
+
+def save_trace(trace: Trace, path: str) -> None:
+    """Write a Trace in the replay format (.csv or .parquet)."""
+    rows = []
+    for gid in range(trace.n_apps):
+        for c in range(trace.max_components):
+            if trace.cpu_req[gid, c] == 0:
+                continue
+            rows.append({
+                "app_id": gid,
+                "submit": float(trace.submit[gid]),
+                "runtime": float(trace.runtime[gid]),
+                "is_elastic": int(trace.is_elastic[gid]),
+                "is_jumpy": int(trace.is_jumpy[gid]),
+                "component": c,
+                "is_core": int(trace.is_core[gid, c]),
+                "cpu_req": float(trace.cpu_req[gid, c]),
+                "mem_req": float(trace.mem_req[gid, c]),
+                "cpu_levels": _fmt_levels(trace.levels[gid, c, :, CPU]),
+                "mem_levels": _fmt_levels(trace.levels[gid, c, :, MEM]),
+            })
+    if path.endswith(".parquet"):
+        if _pd is None:
+            raise RuntimeError("parquet export needs pandas+pyarrow; "
+                               "write .csv instead")
+        _pd.DataFrame(rows, columns=COLUMNS).to_parquet(path, index=False)
+        return
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=COLUMNS)
+        w.writeheader()
+        w.writerows(rows)
+
+
+def _read_rows(path: str) -> list[dict]:
+    if path.endswith(".parquet"):
+        if _pd is None:
+            raise RuntimeError(f"cannot read {path}: parquet support needs "
+                               "pandas+pyarrow (convert to .csv)")
+        return _pd.read_parquet(path).to_dict("records")
+    with open(path, newline="") as f:
+        return list(csv.DictReader(f))
+
+
+def load_trace(path: str, n_apps: int = 0, max_components: int = 0,
+               cfg: ReplayConfig | None = None) -> Trace:
+    """Parse a replay file into a schema-valid Trace."""
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"replay trace not found: {path}")
+    rows = _read_rows(path)
+    if not rows:
+        raise ValueError(f"replay trace {path} is empty")
+
+    by_app: dict = {}
+    for r in rows:
+        by_app.setdefault(str(r["app_id"]), []).append(r)
+    apps = sorted(by_app.values(), key=lambda rs: float(rs[0]["submit"]))
+    if n_apps > 0:
+        apps = apps[:n_apps]
+
+    N = len(apps)
+    width = max(len(rs) for rs in apps)
+    if max_components > 0 and width > max_components:
+        raise ValueError(f"app with {width} components exceeds "
+                         f"max_components={max_components}")
+    C = max_components if max_components > 0 else width
+
+    submit = np.zeros(N, np.float32)
+    runtime = np.zeros(N, np.float32)
+    is_elastic = np.zeros(N, bool)
+    is_jumpy = np.zeros(N, bool)
+    cpu_req = np.zeros((N, C), np.float32)
+    mem_req = np.zeros((N, C), np.float32)
+    is_core = np.zeros((N, C), bool)
+    levels = np.zeros((N, C, SEGMENTS, 2), np.float32)
+
+    for gid, rs in enumerate(apps):
+        submit[gid] = float(rs[0]["submit"])
+        runtime[gid] = float(rs[0]["runtime"])
+        is_elastic[gid] = bool(int(rs[0]["is_elastic"]))
+        is_jumpy[gid] = bool(int(rs[0]["is_jumpy"]))
+        # components pack into slots 0..k in file order (slot ids in the
+        # padded table are positional, not semantic)
+        for c, r in enumerate(rs):
+            cpu_req[gid, c] = float(r["cpu_req"])
+            mem_req[gid, c] = float(r["mem_req"])
+            is_core[gid, c] = bool(int(r["is_core"]))
+            levels[gid, c, :, CPU] = _parse_levels(r["cpu_levels"])
+            levels[gid, c, :, MEM] = _parse_levels(r["mem_levels"])
+
+    exists = cpu_req > 0
+    levels = np.clip(levels * exists[:, :, None, None], 0.0, 1.0)
+    cols = sort_by_submit(submit, runtime=runtime, is_elastic=is_elastic,
+                          is_jumpy=is_jumpy, cpu_req=cpu_req,
+                          mem_req=mem_req, is_core=is_core, levels=levels)
+    exists = cols["cpu_req"] > 0
+    return Trace(n_core=cols["is_core"].sum(1).astype(np.int64),
+                 n_elastic=(exists & ~cols["is_core"]).sum(1).astype(np.int64),
+                 cfg=cfg, **cols).validate()
+
+
+@register("replay", ReplayConfig,
+          doc="replay a recorded CSV/Parquet cluster trace")
+def build_replay(cfg: ReplayConfig) -> Trace:
+    if not cfg.path:
+        raise ValueError("ReplayConfig.path is required "
+                         "(e.g. make_config('replay', path='trace.csv'))")
+    return load_trace(cfg.path, n_apps=cfg.n_apps,
+                      max_components=cfg.max_components, cfg=cfg)

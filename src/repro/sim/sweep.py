@@ -1,12 +1,17 @@
 """Batched experiment sweeps over the simulator (paper Figs. 3-4 grids).
 
 The paper's headline results are *grids* — policy x forecaster x
-safeguard (K1, K2) x seed.  This module makes that scenario space
-enumerable in one process:
+safeguard (K1, K2) x **scenario** x seed.  This module makes that
+space enumerable in one process:
 
   * ``expand_grid``      — cross-product a base ``SimConfig`` with axes
                            (dotted override paths, zipped tuple axes,
-                           explicit cells) and seeds;
+                           explicit cells) and seeds.  The special axis
+                           key ``"scenario"`` swaps the base workload
+                           for another registered family (diurnal,
+                           flashcrowd, heavytail, colocated, replay,
+                           ...), carrying over the shared scale knobs
+                           (``n_apps``, ``max_components``, ``seed``);
   * ``ForecastBatcher``  — stacks the forecast windows of all
                            concurrently running sims into one padded JAX
                            batch, so the jitted GP/ARIMA path (and its
@@ -17,14 +22,19 @@ enumerable in one process:
   * ``run_grid``         — thread-pooled, deterministic-per-seed driver
                            that runs every cell, aggregates
                            ``SimResults`` into the paper's metrics
-                           (median turnaround speedup vs baseline,
-                           failure rate, utilization) and writes a
-                           machine-readable ``BENCH_sweep.json``.
+                           (median turnaround speedup vs the SAME
+                           scenario's baseline, failure rate,
+                           utilization), attaches per-scenario trace
+                           statistics and forecast-error diagnostics,
+                           and writes a machine-readable
+                           ``BENCH_sweep.json``.
 
 CLI::
 
     python -m repro.sim.sweep --policy baseline,pessimistic \
-        --forecaster persist,oracle --seeds 2 --out BENCH_sweep.json
+        --forecaster persist,oracle \
+        --scenario google,diurnal,flashcrowd,heavytail,colocated \
+        --seeds 2 --out BENCH_sweep.json
 """
 from __future__ import annotations
 
@@ -42,8 +52,10 @@ import numpy as np
 from repro.sim.cluster import ClusterConfig
 from repro.sim.engine import (SimConfig, _BatchedForecaster, _make_model,
                               forecast_peaks, run_sim)
-from repro.sim.metrics import aggregate_summaries
-from repro.sim.workload import WorkloadConfig, generate
+from repro.sim.metrics import aggregate_summaries, trace_stats
+from repro.sim.scenarios import build_trace, make_config, scenario_of
+from repro.sim.scenarios.diagnostics import forecast_error_report
+from repro.sim.workload import WorkloadConfig
 
 __all__ = ["SweepCell", "SweepResult", "ForecastBatcher", "expand_grid",
            "run_grid", "quick_base_config", "main"]
@@ -64,7 +76,15 @@ def _set_path(cfg: Any, path: str, value: Any) -> Any:
 
 
 def _apply_overrides(cfg: SimConfig, overrides: Mapping[str, Any]) -> SimConfig:
+    # "scenario" swaps the whole workload config and must resolve before
+    # any "workload.*" field override can land on the new family
+    if "scenario" in overrides:
+        cfg = dataclasses.replace(
+            cfg, workload=make_config(overrides["scenario"],
+                                      base=cfg.workload))
     for path, value in overrides.items():
+        if path == "scenario":
+            continue
         cfg = _set_path(cfg, path, value)
     return cfg
 
@@ -81,6 +101,7 @@ class SweepCell:
     overrides: dict            # dotted-path -> value, applied to the base
     seed: int
     cfg: SimConfig             # fully resolved (overrides + seed applied)
+    scenario: str = "google"   # registry name of cfg.workload's family
 
 
 def expand_grid(base: SimConfig,
@@ -113,11 +134,13 @@ def expand_grid(base: SimConfig,
     out = []
     for combo in combos:
         cfg = _apply_overrides(base, combo)
+        scen = scenario_of(cfg.workload)
         for seed in (seeds if seeds is not None else (None,)):
             scfg = cfg if seed is None else _set_path(
                 cfg, "workload.seed", int(seed))
             out.append(SweepCell(name=_cell_name(combo), overrides=combo,
-                                 seed=scfg.workload.seed, cfg=scfg))
+                                 seed=scfg.workload.seed, cfg=scfg,
+                                 scenario=scen))
     return out
 
 
@@ -253,13 +276,19 @@ class SweepResult:
     wall_s: float
     forecast_batches: int = 0
     forecast_requests: int = 0
+    # per-scenario workload statistics (registry name -> trace_stats)
+    scenarios: dict = dataclasses.field(default_factory=dict)
+    # per-(scenario, forecaster) rolling forecast-error diagnostics
+    forecast_error: list = dataclasses.field(default_factory=list)
 
     def to_json(self) -> dict:
         return {
-            "schema": 1,
+            "schema": 2,
             "base": self.base,
             "cells": self.cells,
             "aggregates": self.aggregates,
+            "scenarios": self.scenarios,
+            "forecast_error": self.forecast_error,
             "wall_s": self.wall_s,
             "forecast_batches": self.forecast_batches,
             "forecast_requests": self.forecast_requests,
@@ -279,16 +308,21 @@ def _aggregate(cells: list[dict]) -> list[dict]:
     for name, group in by_name.items():
         agg = aggregate_summaries([c["summary"] for c in group])
         aggs.append(dict(name=name, overrides=group[0]["overrides"],
+                         scenario=group[0]["scenario"],
                          seeds=[c["seed"] for c in group],
                          wall_s=round(sum(c["wall_s"] for c in group), 2),
                          **agg))
-    base = [a for a in aggs
-            if a["overrides"].get("policy") == "baseline"]
-    if base:
-        # baseline ignores the forecaster, so multiple baseline combos are
-        # interchangeable — use the first as the speedup denominator
-        b = base[0]
-        for a in aggs:
+    # the speedup denominator is the SAME scenario's baseline: turnaround
+    # scales are not comparable across workload regimes.  Baseline ignores
+    # the forecaster, so multiple baseline combos are interchangeable —
+    # use the first per scenario.
+    base_by_scen: dict[str, dict] = {}
+    for a in aggs:
+        if a["overrides"].get("policy") == "baseline":
+            base_by_scen.setdefault(a["scenario"], a)
+    for a in aggs:
+        b = base_by_scen.get(a["scenario"])
+        if b is not None:
             a["turnaround_speedup"] = (b["turnaround_mean"]
                                        / a["turnaround_mean"])
             a["turnaround_speedup_median"] = (
@@ -305,13 +339,19 @@ def run_grid(base: SimConfig,
              engine: str = "vectorized",
              batch_forecasts: bool = True,
              out_path: str | None = None,
-             expect_completed: bool = False) -> SweepResult:
+             expect_completed: bool = False,
+             forecast_diag: bool = True) -> SweepResult:
     """Expand and run a sweep grid; aggregate and optionally write JSON.
 
     Cells run on a thread pool (NumPy/JAX release the GIL in kernels and
     the forecast batcher needs concurrency to stack windows); each cell
     is deterministic per seed regardless of scheduling, because forecast
     rows are computed independently.
+
+    ``forecast_diag`` attaches one rolling forecast-error record per
+    (scenario, forecaster) pair in the grid — computed on series sampled
+    from the scenario's ground-truth profiles, entirely outside the
+    engines, so simulation results stay bit-identical either way.
     """
     from concurrent.futures import ThreadPoolExecutor
 
@@ -327,10 +367,11 @@ def run_grid(base: SimConfig,
         raise ValueError(f"unknown engine {engine!r}")
     batcher = ForecastBatcher() if batch_forecasts else None
 
-    # one workload per unique config: many cells share a (config, seed)
-    # point and the engines never mutate a Workload, so generation happens
-    # once, serially, and the arrays are shared read-only across threads
-    workloads = {cfg: generate(cfg)
+    # one trace per unique scenario config: many cells share a
+    # (config, seed) point and the engines never mutate a Trace, so
+    # generation happens once, serially, and the arrays are shared
+    # read-only across threads
+    workloads = {cfg: build_trace(cfg)
                  for cfg in {cell.cfg.workload for cell in grid}}
 
     def one(cell: SweepCell) -> dict:
@@ -348,7 +389,7 @@ def run_grid(base: SimConfig,
                 f"cell {cell.name} seed {cell.seed}: only {s['completed']}"
                 f"/{s['n_apps']} apps completed (raise max_ticks?)")
         return dict(name=cell.name, overrides=cell.overrides,
-                    seed=cell.seed, summary=s,
+                    scenario=cell.scenario, seed=cell.seed, summary=s,
                     wall_s=round(time.time() - t0, 2))
 
     t0 = time.time()
@@ -359,11 +400,33 @@ def run_grid(base: SimConfig,
     else:
         records = [one(c) for c in grid]
 
+    # per-scenario trace statistics + forecast-error diagnostics (one
+    # record per (scenario, forecaster-model) pair seen in the grid)
+    scen_stats: dict[str, dict] = {}
+    diag: list[dict] = []
+    seen_diag: set = set()
+    for cell in grid:
+        tr = workloads[cell.cfg.workload]
+        scen_stats.setdefault(cell.scenario, trace_stats(tr))
+        if not forecast_diag or cell.cfg.forecaster == "oracle":
+            continue
+        c = cell.cfg
+        model_key = {"gp": c.gp, "arima": c.arima}.get(c.forecaster)
+        key = (cell.scenario, c.forecaster, model_key, c.window)
+        if key in seen_diag:
+            continue
+        seen_diag.add(key)
+        rep = forecast_error_report(tr, c.forecaster, window=c.window,
+                                    gp=c.gp, arima=c.arima)
+        if rep is not None:
+            diag.append({"scenario": cell.scenario, **rep})
+
     result = SweepResult(
         cells=records, aggregates=_aggregate(records),
         base=dataclasses.asdict(base), wall_s=round(time.time() - t0, 2),
         forecast_batches=batcher.batches if batcher else 0,
-        forecast_requests=batcher.requests if batcher else 0)
+        forecast_requests=batcher.requests if batcher else 0,
+        scenarios=scen_stats, forecast_error=diag)
     if out_path:
         result.write(out_path)
     return result
@@ -397,6 +460,10 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
     ap.add_argument("--forecaster", type=_csv(str),
                     default=["persist", "oracle"],
                     help="any of: persist,oracle,gp,arima")
+    ap.add_argument("--scenario", type=_csv(str), default=None,
+                    help="scenario axis, any registered family (e.g. "
+                         "google,diurnal,flashcrowd,heavytail,colocated); "
+                         "omitted = base workload only")
     ap.add_argument("--k1", type=_csv(float), default=None,
                     help="safeguard K1 axis (e.g. 0.0,0.05,0.25)")
     ap.add_argument("--k2", type=_csv(float), default=None,
@@ -411,20 +478,26 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
                     default="vectorized")
     ap.add_argument("--no-batch", action="store_true",
                     help="disable cross-sim forecast batching")
+    ap.add_argument("--no-diag", action="store_true",
+                    help="skip per-scenario forecast-error diagnostics")
     ap.add_argument("--out", default="BENCH_sweep.json")
     args = ap.parse_args(argv)
     if args.seeds < 1:
         ap.error("--seeds must be >= 1")
 
     base = quick_base_config(args.apps, args.hosts, args.components)
-    axes: dict = {"policy": args.policy, "forecaster": args.forecaster}
+    axes: dict = {}
+    if args.scenario:
+        axes["scenario"] = args.scenario
+    axes.update({"policy": args.policy, "forecaster": args.forecaster})
     if args.k1:
         axes["safeguard.k1"] = args.k1
     if args.k2:
         axes["safeguard.k2"] = args.k2
     result = run_grid(base, axes, seeds=range(args.seeds),
                       workers=args.workers, engine=args.engine,
-                      batch_forecasts=not args.no_batch, out_path=args.out)
+                      batch_forecasts=not args.no_batch,
+                      forecast_diag=not args.no_diag, out_path=args.out)
 
     print(f"# {len(result.cells)} cells in {result.wall_s:.1f}s "
           f"({result.forecast_requests} forecast requests in "
@@ -435,6 +508,10 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
         print(f"{a['name']},{a['n_seeds']},{a['turnaround_mean']:.0f},"
               f"{speed:.2f},{a['failed_frac']:.3f},"
               f"{a['util_mem_mean']:.3f}")
+    for d in result.forecast_error:
+        print(f"# forecast_error {d['scenario']}/{d['forecaster']}: "
+              f"median_abs_rel={d['abs_rel_err_median']:.3f} "
+              f"median_|z|={d['median_abs_z']:.2f}")
     return result
 
 

@@ -1,4 +1,4 @@
-"""Workload generator shaped on the paper's §4.1 trace statistics.
+"""Google-shaped workload generator (the paper's §4.1 trace statistics).
 
 The paper samples 150k batch applications from empirical distributions of
 the public Google cluster traces [Reiss'11, Wilkes'11].  Those traces are
@@ -23,6 +23,13 @@ profile over SEGMENTS progress segments — a bounded random walk in
 reservation — mimicking the "fluctuating, peak-reserved" behavior the
 paper describes (reservations are engineered for peak demand, so the peak
 of every profile touches ~the reservation at least once).
+
+This module is ONE workload source among several: it emits the canonical
+:class:`~repro.sim.scenarios.schema.Trace` and registers in the scenario
+registry as the ``"google"`` family (``Workload`` remains as a
+backward-compatible alias of ``Trace``).  See ``repro.sim.scenarios``
+for the other families (diurnal, flashcrowd, heavytail, colocated) and
+the CSV/Parquet replay adapter.
 """
 from __future__ import annotations
 
@@ -30,8 +37,12 @@ import dataclasses
 
 import numpy as np
 
-SEGMENTS = 32
-CPU, MEM = 0, 1
+from repro.sim.scenarios.registry import register
+from repro.sim.scenarios.schema import CPU, MEM, SEGMENTS, Trace  # noqa: F401
+
+#: backward-compatible alias — the canonical schema lives in
+#: repro.sim.scenarios.schema
+Workload = Trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,54 +68,9 @@ class WorkloadConfig:
     seed: int = 0
 
 
-@dataclasses.dataclass
-class Workload:
-    """Column-oriented application table (index = global app id)."""
-
-    submit: np.ndarray        # (N,) seconds
-    is_elastic: np.ndarray    # (N,) bool
-    is_jumpy: np.ndarray      # (N,) bool — "unpredictable" class
-    n_core: np.ndarray        # (N,) int
-    n_elastic: np.ndarray     # (N,) int
-    runtime: np.ndarray       # (N,) base runtime (all components running)
-    cpu_req: np.ndarray       # (N, C) per-component reservation (0 = absent)
-    mem_req: np.ndarray       # (N, C) GB
-    is_core: np.ndarray       # (N, C) bool
-    levels: np.ndarray        # (N, C, SEGMENTS, 2) utilization fraction
-    cfg: WorkloadConfig
-
-    @property
-    def n_apps(self) -> int:
-        return self.submit.shape[0]
-
-    @property
-    def max_components(self) -> int:
-        return self.cpu_req.shape[1]
-
-    def usage(self, gid: np.ndarray, progress: np.ndarray) -> np.ndarray:
-        """(len(gid), C, 2) instantaneous usage at given progress in [0,1].
-
-        Levels are linearly interpolated between segment knots: real
-        utilization ramps (allocators grow/shrink heaps over minutes)
-        rather than stepping discontinuously — this is what makes the
-        series *learnable*, which the paper's Fig. 2 error distributions
-        presuppose."""
-        x = np.clip(progress, 0.0, 1.0) * (SEGMENTS - 1)
-        s0 = np.minimum(x.astype(np.int64), SEGMENTS - 2)
-        frac = (x - s0).astype(np.float32)
-        ar = np.arange(len(gid))[:, None]
-        ac = np.arange(self.max_components)[None, :]
-        lv0 = self.levels[gid][ar, ac, s0[:, None], :]
-        lv1 = self.levels[gid][ar, ac, s0[:, None] + 1, :]
-        lv = lv0 + (lv1 - lv0) * frac[:, None, None]
-        # "unpredictable" apps step discontinuously (no ramp to learn from)
-        jumpy = self.is_jumpy[gid][:, None, None]
-        lv = np.where(jumpy, lv0, lv)
-        req = np.stack([self.cpu_req[gid], self.mem_req[gid]], axis=-1)
-        return lv * req
-
-
-def generate(cfg: WorkloadConfig) -> Workload:
+@register("google", WorkloadConfig,
+          doc="the paper's Google-trace-shaped batch workload (§4.1)")
+def generate(cfg: WorkloadConfig) -> Trace:
     rng = np.random.RandomState(cfg.seed)
     N, C = cfg.n_apps, cfg.max_components
 
@@ -162,9 +128,9 @@ def generate(cfg: WorkloadConfig) -> Workload:
     levels = (walk * exists[:, :, None, None]).astype(np.float32)
 
     is_jumpy = rng.rand(N) < cfg.jumpy_frac
-    return Workload(submit=submit.astype(np.float32), is_elastic=is_elastic,
-                    is_jumpy=is_jumpy,
-                    n_core=n_core.astype(np.int64),
-                    n_elastic=n_elastic.astype(np.int64),
-                    runtime=runtime, cpu_req=cpu_req, mem_req=mem_req,
-                    is_core=is_core & exists, levels=levels, cfg=cfg)
+    return Trace(submit=submit.astype(np.float32), is_elastic=is_elastic,
+                 is_jumpy=is_jumpy,
+                 n_core=n_core.astype(np.int64),
+                 n_elastic=n_elastic.astype(np.int64),
+                 runtime=runtime, cpu_req=cpu_req, mem_req=mem_req,
+                 is_core=is_core & exists, levels=levels, cfg=cfg).validate()

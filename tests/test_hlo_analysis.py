@@ -65,7 +65,8 @@ def test_collectives_counted_with_loop_multiplier():
     code = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 import sys
 sys.path.insert(0, %r)

@@ -10,7 +10,9 @@ def test_pipeline_matches_sequential_4stages():
     code = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from repro.distributed.pipeline import pipeline_apply
 
 S, M, mb, d = 4, 3, 8, 16

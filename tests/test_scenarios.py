@@ -1,0 +1,320 @@
+"""Scenario subsystem tests: schema validity, per-seed determinism,
+workload statistics, replay round-trips, engine end-to-end runs, and
+the sweep's scenario axis."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.sim import ClusterConfig, SimConfig, WorkloadConfig, run_sim
+from repro.sim.scenarios import (SEGMENTS, Trace, TraceValidationError,
+                                 build_trace, load_trace, make_config,
+                                 save_trace, scenario_names, scenario_of)
+from repro.sim.scenarios.diagnostics import (forecast_error_report,
+                                             sample_usage_series)
+from repro.sim.scenarios.replay import ReplayConfig, _pd
+from repro.sim.sweep import run_grid
+
+GENERATORS = ("google", "diurnal", "flashcrowd", "heavytail", "colocated")
+
+
+def _small(name, seed=3, n_apps=30):
+    return make_config(name, n_apps=n_apps, seed=seed)
+
+
+# ----------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------
+
+def test_registry_lists_all_builtin_families():
+    names = scenario_names()
+    for want in GENERATORS + ("replay",):
+        assert want in names
+
+
+def test_registry_unknown_name_and_config():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        make_config("nope")
+    with pytest.raises(TypeError, match="not a registered"):
+        build_trace(object())
+
+
+def test_make_config_same_family_keeps_base_verbatim():
+    base = WorkloadConfig(n_apps=11, max_runtime=999.0, seed=4)
+    cfg = make_config("google", base=base)
+    assert cfg == base
+    assert make_config("google", base=base, seed=8).seed == 8
+
+
+def test_make_config_cross_family_carries_only_scale_knobs():
+    base = WorkloadConfig(n_apps=11, max_components=9, seed=4,
+                          max_runtime=999.0)
+    cfg = make_config("diurnal", base=base)
+    assert (cfg.n_apps, cfg.max_components, cfg.seed) == (11, 9, 4)
+    # family shape parameters must NOT be polluted by the base family
+    assert cfg.max_runtime != 999.0
+
+
+# ----------------------------------------------------------------------
+# every registered generator: schema-valid, deterministic, runnable
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", GENERATORS)
+def test_generator_emits_schema_valid_trace(name):
+    tr = build_trace(_small(name))
+    assert isinstance(tr, Trace)
+    tr.validate()                               # raises on any violation
+    assert scenario_of(tr.cfg) == name
+    assert (np.diff(tr.submit) >= 0).all()
+    assert tr.levels.shape == (tr.n_apps, tr.max_components, SEGMENTS, 2)
+
+
+@pytest.mark.parametrize("name", GENERATORS)
+def test_generator_per_seed_determinism(name):
+    a = build_trace(_small(name, seed=5))
+    b = build_trace(_small(name, seed=5))
+    c = build_trace(_small(name, seed=6))
+    for f in ("submit", "runtime", "cpu_req", "mem_req", "levels"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    assert not np.array_equal(a.submit, c.submit)
+
+
+@pytest.mark.parametrize("name", GENERATORS)
+def test_generator_usage_within_reservation(name):
+    tr = build_trace(_small(name))
+    for prog in (0.0, 0.4, 1.0):
+        u = tr.usage(np.arange(tr.n_apps),
+                     np.full(tr.n_apps, prog, np.float32))
+        assert (u[:, :, 0] <= tr.cpu_req + 1e-4).all()
+        assert (u[:, :, 1] <= tr.mem_req + 1e-4).all()
+
+
+@pytest.mark.parametrize("name", GENERATORS)
+def test_engine_runs_every_scenario_end_to_end(name):
+    cfg = SimConfig(cluster=ClusterConfig(n_hosts=4, max_running_apps=32),
+                    workload=_small(name, n_apps=16),
+                    policy="pessimistic", forecaster="persist",
+                    max_ticks=20_000)
+    s = run_sim(cfg).summary()
+    assert s["completed"] == 16, s
+    assert np.isfinite(s["turnaround_mean"])
+    assert 0.0 <= s["util_mem_mean"] <= 1.0
+
+
+# ----------------------------------------------------------------------
+# family statistics
+# ----------------------------------------------------------------------
+
+def test_google_elastic_fraction_tracks_config():
+    tr = build_trace(make_config("google", n_apps=400, elastic_frac=0.6,
+                                 seed=0))
+    assert abs(tr.is_elastic.mean() - 0.6) < 0.1
+    assert (tr.n_elastic[~tr.is_elastic] == 0).all()
+
+
+def test_colocated_mix_proportions_and_anticorrelation():
+    cfg = make_config("colocated", n_apps=400, seed=0)
+    tr = build_trace(cfg)
+    # batch apps are the elastic class; service_frac sets the split
+    assert abs((~tr.is_elastic).mean() - cfg.service_frac) < 0.1
+    # anti-correlated utilization: average the wall-clock-locked profiles
+    # of each class on a common day-phase grid — peaks half a day apart
+    exists = tr.cpu_req > 0
+    mean_lv = np.array([tr.levels[i][exists[i]][:, :, 1].mean()
+                        for i in range(tr.n_apps)])
+    phase = (tr.submit + 0.5 * tr.runtime) % cfg.day_s
+    day = (phase > cfg.day_s * 0.25) & (phase < cfg.day_s * 0.75)
+    svc, bat = ~tr.is_elastic, tr.is_elastic
+    if (svc & day).any() and (bat & day).any():
+        assert mean_lv[svc & day].mean() > mean_lv[bat & day].mean()
+
+
+def test_heavytail_runtimes_and_demands_have_heavy_tail():
+    tr = build_trace(make_config("heavytail", n_apps=500, seed=0))
+    assert np.percentile(tr.runtime, 99) / np.median(tr.runtime) > 10
+    mem = tr.mem_req[tr.mem_req > 0]
+    assert np.percentile(mem, 99) / np.median(mem) > 4
+    assert tr.is_elastic.mean() < 0.4           # rigid-dominant
+
+
+def test_flashcrowd_burst_arrivals_are_correlated():
+    cfg = make_config("flashcrowd", n_apps=300, seed=0)
+    tr = build_trace(cfg)
+    # some 60 s window must contain a large synchronized burst
+    binned = np.bincount((tr.submit // 60).astype(int))
+    assert binned.max() >= 10
+    # and the bursts dominate a background that never bunches like that
+    assert binned.max() > 5 * np.median(binned[binned > 0])
+
+
+def test_diurnal_arrivals_modulated_by_day_cycle():
+    cfg = make_config("diurnal", n_apps=600, seed=0)
+    tr = build_trace(cfg)
+    phase = (tr.submit % cfg.day_s) / cfg.day_s
+    day = ((phase > 0.25) & (phase < 0.75)).sum()
+    night = len(phase) - day
+    assert day > 1.5 * night
+
+
+# ----------------------------------------------------------------------
+# schema validation catches broken traces
+# ----------------------------------------------------------------------
+
+def test_validate_rejects_unsorted_submit_and_bad_levels():
+    tr = build_trace(_small("google"))
+    bad = dataclasses.replace(tr, submit=tr.submit[::-1].copy())
+    with pytest.raises(TraceValidationError, match="nondecreasing"):
+        bad.validate()
+    lv = tr.levels.copy()
+    lv[0, 0, 0, 0] = 1.5
+    with pytest.raises(TraceValidationError, match="outside"):
+        dataclasses.replace(tr, levels=lv).validate()
+
+
+# ----------------------------------------------------------------------
+# replay adapter
+# ----------------------------------------------------------------------
+
+def test_replay_csv_roundtrip_is_exact(tmp_path):
+    tr = build_trace(_small("flashcrowd", n_apps=20))
+    path = str(tmp_path / "trace.csv")
+    save_trace(tr, path)
+    back = build_trace(make_config("replay", path=path,
+                                   max_components=tr.max_components))
+    for f in ("submit", "runtime", "cpu_req", "mem_req", "levels"):
+        assert np.array_equal(getattr(tr, f), getattr(back, f)), f
+    assert np.array_equal(tr.is_core, back.is_core)
+    assert np.array_equal(tr.n_elastic, back.n_elastic)
+
+
+@pytest.mark.skipif(_pd is None, reason="pandas/pyarrow not installed")
+def test_replay_parquet_roundtrip_is_exact(tmp_path):
+    tr = build_trace(_small("diurnal", n_apps=12))
+    path = str(tmp_path / "trace.parquet")
+    save_trace(tr, path)
+    back = load_trace(path, max_components=tr.max_components)
+    assert np.array_equal(tr.levels, back.levels)
+    assert np.array_equal(tr.submit, back.submit)
+
+
+def test_replayed_trace_runs_in_engine_and_matches_source(tmp_path):
+    src = _small("google", n_apps=16)
+    tr = build_trace(src)
+    path = str(tmp_path / "trace.csv")
+    save_trace(tr, path)
+    cl = ClusterConfig(n_hosts=4, max_running_apps=32)
+    a = run_sim(SimConfig(cluster=cl, workload=src, policy="baseline",
+                          forecaster="persist", max_ticks=20_000))
+    b = run_sim(SimConfig(
+        cluster=cl,
+        workload=ReplayConfig(path=path, max_components=tr.max_components),
+        policy="baseline", forecaster="persist", max_ticks=20_000))
+    # the replayed file IS the source workload: identical results
+    assert a.summary() == b.summary()
+
+
+def test_replay_roundtrip_exact_for_tiny_levels(tmp_path):
+    """Levels below the families' 0.02 floor (real traces can go lower)
+    must still round-trip float32-exactly through the text format."""
+    tr = build_trace(_small("google", n_apps=8))
+    rng = np.random.RandomState(0)
+    lv = (tr.levels * rng.uniform(1e-4, 1.0, tr.levels.shape)
+          ).astype(np.float32)
+    tr = dataclasses.replace(tr, levels=lv)
+    path = str(tmp_path / "tiny.csv")
+    save_trace(tr, path)
+    back = load_trace(path, max_components=tr.max_components)
+    assert np.array_equal(tr.levels, back.levels)
+
+
+def test_replay_max_components_must_cover_widest_app(tmp_path):
+    tr = build_trace(_small("google", n_apps=10))
+    width = int((tr.cpu_req > 0).sum(1).max())
+    path = str(tmp_path / "trace.csv")
+    save_trace(tr, path)
+    with pytest.raises(ValueError, match="exceeds"):
+        load_trace(path, max_components=width - 1)
+
+
+@pytest.mark.parametrize("name", ("diurnal", "flashcrowd", "heavytail",
+                                  "colocated"))
+def test_family_rejects_too_small_max_components(name):
+    with pytest.raises(ValueError, match="max_components"):
+        build_trace(make_config(name, n_apps=10, max_components=2))
+
+
+def test_replay_truncation_and_missing_file(tmp_path):
+    tr = build_trace(_small("google", n_apps=10))
+    path = str(tmp_path / "trace.csv")
+    save_trace(tr, path)
+    cut = load_trace(path, n_apps=4)
+    assert cut.n_apps == 4
+    with pytest.raises(FileNotFoundError):
+        load_trace(str(tmp_path / "absent.csv"))
+
+
+# ----------------------------------------------------------------------
+# diagnostics
+# ----------------------------------------------------------------------
+
+def test_sample_usage_series_shapes_and_determinism():
+    tr = build_trace(_small("heavytail"))
+    s1 = sample_usage_series(tr, n_series=6, length=40, seed=1)
+    s2 = sample_usage_series(tr, n_series=6, length=40, seed=1)
+    assert s1.shape == (6, 40)
+    assert np.array_equal(s1, s2)
+
+
+def test_forecast_error_report_persist_and_oracle():
+    tr = build_trace(_small("google"))
+    rep = forecast_error_report(tr, "persist", n_series=6, n_eval=3)
+    assert rep["forecaster"] == "persist"
+    assert np.isfinite(rep["abs_rel_err_median"])
+    assert forecast_error_report(tr, "oracle") is None
+
+
+# ----------------------------------------------------------------------
+# sweep scenario axis
+# ----------------------------------------------------------------------
+
+def test_sweep_scenario_axis_per_scenario_metrics(tmp_path):
+    base = SimConfig(cluster=ClusterConfig(n_hosts=3, max_running_apps=32),
+                     workload=WorkloadConfig(n_apps=16, max_components=8,
+                                             max_runtime=1200.0,
+                                             mean_burst_gap=2.0,
+                                             mean_long_gap=40.0),
+                     forecaster="persist", max_ticks=20_000)
+    out = tmp_path / "BENCH_sweep.json"
+    res = run_grid(base,
+                   axes={"scenario": ["google", "flashcrowd"],
+                         "policy": ["baseline", "pessimistic"]},
+                   seeds=[0], out_path=str(out))
+    assert len(res.cells) == 4
+    assert {c["scenario"] for c in res.cells} == {"google", "flashcrowd"}
+    # per-scenario speedup: each scenario's baseline is its own denominator
+    for a in res.aggregates:
+        if a["overrides"]["policy"] == "baseline":
+            assert a["turnaround_speedup"] == 1.0
+        assert np.isfinite(a["turnaround_speedup"])
+    # per-scenario trace stats + forecast-error diagnostics in the artifact
+    assert set(res.scenarios) == {"google", "flashcrowd"}
+    assert res.scenarios["google"]["n_apps"] == 16
+    diag_keys = {(d["scenario"], d["forecaster"])
+                 for d in res.forecast_error}
+    assert diag_keys == {("google", "persist"), ("flashcrowd", "persist")}
+    import json
+    data = json.loads(out.read_text())
+    assert data["schema"] == 2
+    assert set(data["scenarios"]) == {"google", "flashcrowd"}
+    assert len(data["forecast_error"]) == 2
+
+
+def test_sweep_scenario_axis_workload_override_applies_after_swap():
+    base = SimConfig(workload=WorkloadConfig(n_apps=8))
+    from repro.sim.sweep import expand_grid
+    cells = expand_grid(base, axes={"scenario": ["heavytail"],
+                                    "workload.mean_gap": [33.0]},
+                        seeds=[2])
+    cfg = cells[0].cfg.workload
+    assert scenario_of(cfg) == "heavytail"
+    assert cfg.mean_gap == 33.0 and cfg.n_apps == 8 and cfg.seed == 2

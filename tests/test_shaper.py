@@ -15,7 +15,8 @@ def _problem(host_cpu, host_mem, apps):
     """apps: list of dicts with comps: (host, cpu, mem, core, alive)."""
     A = len(apps)
     C = max(len(a) for a in apps)
-    z = lambda dt: np.zeros((A, C), dt)
+    def z(dt):
+        return np.zeros((A, C), dt)
     ex, co = z(bool), z(bool)
     ho = z(np.int32)
     cp, me, al = z(np.float32), z(np.float32), z(np.float32)

@@ -133,7 +133,8 @@ def test_sweep_aggregates_and_artifact(tmp_path):
                          "forecaster": ["oracle"]},
                    seeds=[0, 1], out_path=str(out))
     data = json.loads(out.read_text())
-    assert data["schema"] == 1
+    assert data["schema"] == 2
+    assert "google" in data["scenarios"]        # per-scenario trace stats
     assert len(data["cells"]) == 4 and len(data["aggregates"]) == 2
     for c in data["cells"]:
         for key in ("turnaround_mean", "failed_frac", "util_mem_mean"):
