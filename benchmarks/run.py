@@ -8,6 +8,8 @@
   fig5   prototype: baseline vs dynamic on live training jobs
   scenarios  cross-scenario robustness grid (every workload family x
          policy); writes BENCH_scenarios.json
+  calibration  Gaussian-vs-conformal safeguard study (coverage /
+         turnaround / failure trade-offs); writes BENCH_calibration.json
   kernels  Pallas kernel microbenches
   roofline dry-run-derived roofline table (if dryrun_results.json exists)
 
@@ -26,8 +28,8 @@ import sys
 import time
 import traceback
 
-SECTIONS = ("fig2", "fig3", "fig4", "fig5", "scenarios", "kernels",
-            "roofline")
+SECTIONS = ("fig2", "fig3", "fig4", "fig5", "scenarios", "calibration",
+            "kernels", "roofline")
 
 
 def main() -> None:
@@ -59,6 +61,9 @@ def main() -> None:
             elif sec == "scenarios":
                 from benchmarks import scenario_sweep
                 scenario_sweep.main(quick)
+            elif sec == "calibration":
+                from benchmarks import calibration
+                calibration.main(quick)
             elif sec == "kernels":
                 from benchmarks import kernels
                 kernels.main(quick)

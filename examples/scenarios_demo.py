@@ -10,8 +10,8 @@
 """
 from repro.sim import (ClusterConfig, SimConfig, WorkloadConfig, run_sim,
                        trace_stats)
-from repro.sim.scenarios import (build_trace, make_config, scenario_names,
-                                 save_trace)
+from repro.sim.scenarios import (build_trace, make_config, save_trace,
+                                 scenario_names)
 from repro.sim.scenarios.replay import ReplayConfig
 from repro.sim.sweep import run_grid
 

@@ -1,6 +1,6 @@
 """Utilization forecasting (paper §3.1): predictive mean + *variance*."""
-from repro.core.forecast.base import Forecast, Forecaster, batched
 from repro.core.forecast.arima import ARIMAConfig, ARIMAForecaster
+from repro.core.forecast.base import Forecast, Forecaster, batched
 from repro.core.forecast.gp import GPConfig, GPForecaster, build_patterns
 from repro.core.forecast.oracle import OracleForecaster
 

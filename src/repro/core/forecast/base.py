@@ -19,6 +19,9 @@ from typing import Protocol
 import jax
 import jax.numpy as jnp
 
+from repro.core.uncertainty.scoring import (gaussian_quantile_scale,
+                                            sigma_from_var)
+
 Array = jax.Array
 
 
@@ -36,9 +39,29 @@ class Forecast:
     var: Array
 
     @property
-    def upper(self) -> Array:
-        """One-sigma upper band — what a K2=1 safeguard would add."""
-        return self.mean + jnp.sqrt(jnp.maximum(self.var, 0.0))
+    def sigma(self) -> Array:
+        """Predictive standard deviation (shared clamp, see Eq. 9)."""
+        return sigma_from_var(self.var)
+
+    def quantile(self, q, *, scale: Array | None = None) -> Array:
+        """Upper q-quantile of the predictive distribution.
+
+        Default is the Gaussian form ``mean + z(q) * sigma`` (the
+        paper's §3.1 distributional assumption, which Eq. 9's K2 bands
+        instantiate).  Pass ``scale`` — e.g. a calibrated score
+        quantile from :mod:`repro.core.uncertainty.conformal` — to get
+        a *distribution-free* quantile ``mean + scale * sigma`` instead;
+        ``q`` is then only the nominal level the scale was built for.
+        """
+        z = gaussian_quantile_scale(q) if scale is None else scale
+        return self.mean + z * self.sigma
+
+    def interval(self, q_lo, q_hi, *,
+                 scale_lo: Array | None = None,
+                 scale_hi: Array | None = None) -> tuple[Array, Array]:
+        """(lower, upper) predictive interval at the given levels."""
+        return (self.quantile(q_lo, scale=scale_lo),
+                self.quantile(q_hi, scale=scale_hi))
 
 
 class Forecaster(Protocol):

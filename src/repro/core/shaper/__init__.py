@@ -3,7 +3,8 @@ from repro.core.shaper.baseline import baseline_shape
 from repro.core.shaper.optimistic import optimistic_shape
 from repro.core.shaper.pessimistic import (ShapeDecision, ShapeProblem,
                                            pessimistic_shape)
-from repro.core.shaper.safeguard import SafeguardConfig, beta, shaped_demand
+from repro.core.shaper.safeguard import (SafeguardConfig, beta,
+                                         shaped_demand, shaped_demand_scaled)
 
 POLICIES = {
     "baseline": baseline_shape,
@@ -14,5 +15,5 @@ POLICIES = {
 __all__ = [
     "ShapeProblem", "ShapeDecision", "pessimistic_shape",
     "optimistic_shape", "baseline_shape", "POLICIES",
-    "SafeguardConfig", "beta", "shaped_demand",
+    "SafeguardConfig", "beta", "shaped_demand", "shaped_demand_scaled",
 ]

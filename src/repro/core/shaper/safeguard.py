@@ -8,6 +8,15 @@ K2 in {0, 1, 2, 3}, "bands around the mean of the predictive Gaussian
 distribution, according to the three-sigma rule": i.e. the dynamic term
 is K2 predictive *standard deviations* (V in Eq. 9 is the forecaster's
 variance estimate; sigma bands are its actionable form).
+
+``conformal`` mode (``SimConfig.calibration``) keeps Eq. 9's shape but
+replaces the fixed Gaussian multiplier with a per-series *calibrated*
+score quantile from :mod:`repro.core.uncertainty`:  the dynamic term
+becomes ``q_hat(q) * sigma`` — a distribution-free upper band whose
+coverage tracks the nominal level even where the Gaussian assumption
+fails (heavy-tailed or regime-switching workloads).
+``shaped_demand_scaled`` is that path: identical math, with the sigma
+multiplier supplied per element instead of baked into the config.
 """
 from __future__ import annotations
 
@@ -16,6 +25,8 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.uncertainty.scoring import sigma_from_var
 
 Array = jax.Array
 
@@ -33,8 +44,7 @@ def beta(request: Array, var: Array, cfg: SafeguardConfig) -> Array:
     var: forecaster predictive variance (same units squared).
     Broadcasts over any shape (per-component, per-resource).
     """
-    sigma = jnp.sqrt(jnp.maximum(var, 0.0))
-    return cfg.k1 * request + cfg.k2 * sigma
+    return cfg.k1 * request + cfg.k2 * sigma_from_var(var)
 
 
 @partial(jax.jit, static_argnames="cfg")
@@ -48,4 +58,19 @@ def shaped_demand(pred_peak: Array, request: Array, var: Array,
     alive (K1 = 0 with a confident predictor would allocate ~0).
     """
     b = beta(request, var, cfg)
+    return jnp.clip(pred_peak + b, 0.0, request)
+
+
+@jax.jit
+def shaped_demand_scaled(pred_peak: Array, request: Array, var: Array,
+                         k1: Array, scale: Array) -> Array:
+    """Eq. 9 with a per-element sigma multiplier (conformal safeguard).
+
+    ``scale`` is the calibrated upper-quantile multiplier ``q_hat`` for
+    each series (broadcastable against ``pred_peak``); everything else
+    matches :func:`shaped_demand`, including the (0, request] clamp.
+    Monotone in ``scale``: a higher target quantile can only allocate
+    more, which is what makes the adaptive controller's knob safe.
+    """
+    b = k1 * request + scale * sigma_from_var(var)
     return jnp.clip(pred_peak + b, 0.0, request)

@@ -1,0 +1,36 @@
+"""Uncertainty calibration & risk-aware safeguards (paper §3.1 + Eq. 9).
+
+The paper's mechanism is forecasting *with quantified uncertainty* that
+modulates allocations; this package makes that uncertainty trustworthy:
+
+  * :mod:`~repro.core.uncertainty.scoring`   — batched, jittable proper
+    scoring metrics (coverage vs nominal, pinball, CRPS) plus the one
+    shared variance -> sigma clamp;
+  * :mod:`~repro.core.uncertainty.conformal` — online split-conformal
+    calibration: per-series residual-score ring buffers and the
+    distribution-free ``q_hat`` quantile that replaces the Gaussian
+    ``K2`` multiplier in Eq. 9;
+  * :mod:`~repro.core.uncertainty.adaptive`  — ACI-style controller that
+    turns a failure-rate budget into the target quantile set-point;
+  * :mod:`~repro.core.uncertainty.online`    — the engine-facing tick
+    loop tying forecasts, realized peaks, and calibrated scales together.
+"""
+from repro.core.uncertainty.adaptive import QuantileController
+from repro.core.uncertainty.conformal import (CalibrationConfig,
+                                              ConformalForecaster,
+                                              ScoreBuffer, conformal_scale)
+from repro.core.uncertainty.online import OnlineCalibrator
+from repro.core.uncertainty.scoring import (bucket_pow2, crps_empirical,
+                                            crps_gaussian,
+                                            empirical_coverage,
+                                            gaussian_quantile_scale,
+                                            pinball_loss, sigma_from_var,
+                                            sigma_from_var_np)
+
+__all__ = [
+    "sigma_from_var", "sigma_from_var_np", "bucket_pow2",
+    "gaussian_quantile_scale", "empirical_coverage",
+    "pinball_loss", "crps_gaussian", "crps_empirical",
+    "CalibrationConfig", "conformal_scale", "ScoreBuffer",
+    "ConformalForecaster", "QuantileController", "OnlineCalibrator",
+]

@@ -1,0 +1,63 @@
+"""Adaptive target-quantile controller (risk budget as a set-point).
+
+Split-conformal calibration makes the safeguard's coverage match its
+*nominal* level q; this controller closes the remaining loop and picks
+q itself.  Flex (arXiv:2006.01354) frames reclamation as an explicit
+risk budget and ADARES (arXiv:1812.01837) adapts its confidence online;
+following adaptive conformal inference (ACI), we servo the level on the
+realized miscoverage stream:
+
+    q_{t+1} = clip( q_t + gamma * (err_t - budget), q_min, q_max )
+
+where ``err_t`` is the fraction of freshly resolved predictions whose
+realized peak exceeded the deployed upper bound.  Above-budget
+miscoverage widens the band (q up), below-budget miscoverage narrows it
+(q down) — the failure axis of paper Fig. 3 becomes a configuration
+input instead of an experimental outcome.
+
+The controller is deliberately a *fleet-level* scalar: failures are
+pooled across series exactly like the paper's failure-rate metric, and
+a scalar q keeps the conformal quantile lookup one batched call.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.uncertainty.conformal import CalibrationConfig
+
+__all__ = ["QuantileController"]
+
+
+class QuantileController:
+    """ACI-style integrator from miscoverage events to the target q."""
+
+    def __init__(self, cfg: CalibrationConfig):
+        self.cfg = cfg
+        self.q = float(np.clip(cfg.q, cfg.q_min, cfg.q_max))
+        self.steps = 0
+        self.errors = 0          # miscoverage events seen
+        self.resolved = 0        # predictions resolved
+
+    def update(self, errors: np.ndarray) -> float:
+        """Fold one tick's resolved miscoverage indicators into q.
+
+        ``errors`` is a boolean array (one entry per prediction resolved
+        this tick); empty arrays leave q untouched — no observation, no
+        control action.
+        """
+        n = int(errors.size)
+        if n == 0:
+            return self.q
+        err_rate = float(np.mean(errors))
+        self.resolved += n
+        self.errors += int(errors.sum())
+        self.steps += 1
+        self.q = float(np.clip(
+            self.q + self.cfg.gamma * (err_rate - self.cfg.budget),
+            self.cfg.q_min, self.cfg.q_max))
+        return self.q
+
+    @property
+    def miscoverage(self) -> float:
+        """Lifetime realized miscoverage rate (the budget's read-back)."""
+        return self.errors / max(self.resolved, 1)

@@ -1,0 +1,222 @@
+"""Online split-conformal calibration of forecast upper bounds.
+
+The paper's safeguard (Eq. 9) adds ``K2`` predictive *standard
+deviations* to the forecast peak — "bands around the mean of the
+predictive Gaussian distribution".  That band carries its nominal
+coverage only while the residuals really are Gaussian; on heavy-tailed
+or regime-switching workloads it under-covers and the failure-rate knob
+the paper advertises stops being trustworthy.
+
+Split-conformal calibration fixes this without distributional
+assumptions: keep a ring buffer of *nonconformity scores* — here the
+sigma-normalized residuals
+
+    s_t = (y_t - mean_t) / sigma_t
+
+— and replace the Gaussian z-multiplier with the empirical
+``ceil((n+1) q) / n`` quantile of the recorded scores.  The resulting
+``mean + q_hat * sigma`` upper bound inherits the finite-sample
+coverage guarantee of conformal prediction (>= q under exchangeability)
+while staying *locally adaptive*: sigma still scales the band per
+series, the calibration only corrects its overall level.
+
+Layout mirrors the rest of the stack: ring-buffer state is host-side
+NumPy (like :class:`repro.core.monitor.Monitor` — feeding it is I/O),
+the quantile math is pure JAX, jitted and batched over every series of
+a fleet in one padded call (like the forecasters).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.uncertainty.scoring import (bucket_pow2,
+                                            gaussian_quantile_scale)
+
+Array = jax.Array
+
+__all__ = ["CalibrationConfig", "conformal_scale", "ScoreBuffer",
+           "ConformalForecaster"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationConfig:
+    """Conformal-safeguard configuration (``SimConfig.calibration``).
+
+    ``enabled=False`` is the bit-identical legacy path: the safeguard
+    stays ``K1*R + K2*sigma`` exactly as Eq. 9.  Enabled, the dynamic
+    term becomes ``q_hat(q) * sigma`` with ``q_hat`` the calibrated
+    score quantile; ``adaptive=True`` additionally servo-controls the
+    target ``q`` so the realized miscoverage tracks ``budget`` (the
+    failure axis of paper Fig. 3 becomes a set-point, not an outcome).
+    """
+
+    enabled: bool = False
+    q: float = 0.9          # target upper-quantile (coverage set-point)
+    capacity: int = 128     # per-series score-ring capacity
+    min_scores: int = 16    # below this, fall back down the hierarchy
+    # hierarchical fallback for young series: sigma-normalized scores are
+    # comparable across series, so a fleet-wide pooled quantile (group
+    # conformal) beats reverting to the uncalibrated K2 band while a
+    # series' own ring warms up.  False = fall straight back to K2.
+    pool: bool = True
+    pool_capacity: int = 1024
+    adaptive: bool = False  # tune q online against the failure budget
+    budget: float = 0.1     # target miscoverage (failure-rate budget)
+    gamma: float = 0.05     # ACI step size for the adaptive controller
+    q_min: float = 0.5      # adaptive controller clamp
+    q_max: float = 0.995
+
+
+@jax.jit
+def conformal_scale(scores: Array, counts: Array, q: Array,
+                    fallback: Array) -> Array:
+    """Split-conformal quantile of per-series score rings.
+
+    scores:  (B, capacity) ring contents, newest written last (only the
+             trailing ``min(count, capacity)`` cells are live);
+    counts:  (B,) total scores ever pushed per series;
+    q:       scalar or (B,) target quantile level;
+    fallback: scalar or (B,) value returned where a series has no
+             scores yet (the K2 sigma-multiplier, in the safeguard).
+
+    Returns (B,) ``q_hat`` — the ``ceil((n+1) q)``-th order statistic
+    of the live scores (the finite-sample-corrected conformal quantile;
+    when ``(n+1) q > n`` it saturates at the sample maximum, the
+    standard bounded-support surrogate for the +inf bound).
+    """
+    B, cap = scores.shape
+    n = jnp.minimum(counts, cap)                              # (B,)
+    pos = jnp.arange(cap)[None, :]
+    live = pos >= (cap - n)[:, None]
+    masked = jnp.where(live, scores, jnp.inf)
+    srt = jnp.sort(masked, axis=1)                            # live first
+    q = jnp.broadcast_to(jnp.asarray(q, jnp.float32), (B,))
+    k = jnp.ceil((n + 1.0) * q).astype(jnp.int32) - 1
+    k = jnp.clip(k, 0, jnp.maximum(n - 1, 0))
+    val = jnp.take_along_axis(srt, k[:, None], axis=1)[:, 0]
+    fallback = jnp.broadcast_to(jnp.asarray(fallback, jnp.float32), (B,))
+    return jnp.where(n > 0, val, fallback)
+
+
+class ScoreBuffer:
+    """Per-series nonconformity-score ring buffers (host-side state).
+
+    Same design as :class:`repro.core.monitor.Monitor`: a dense
+    ``(series, capacity)`` float32 table rolled on push, so thousands of
+    component series share one allocation and ``scales`` runs ONE
+    padded jitted quantile over any subset of rows.
+    """
+
+    def __init__(self, n_series: int, capacity: int):
+        self.capacity = capacity
+        self.buf = np.zeros((n_series, capacity), np.float32)
+        self.count = np.zeros((n_series,), np.int64)
+
+    def push(self, rows: np.ndarray, scores: np.ndarray) -> None:
+        """Append one score for each series in ``rows`` (vectorized).
+
+        Rows must be unique — duplicate indices would collide in the
+        fancy-indexed write; use :meth:`push_many` to append several
+        scores to ONE series.
+        """
+        self.buf[rows] = np.roll(self.buf[rows], -1, axis=1)
+        self.buf[rows, -1] = scores
+        self.count[rows] += 1
+
+    def push_many(self, row: int, scores: np.ndarray) -> None:
+        """Append a batch of scores to a single series' ring."""
+        k = min(scores.shape[0], self.capacity)
+        if k == 0:
+            return
+        self.buf[row] = np.roll(self.buf[row], -k)
+        self.buf[row, -k:] = scores[-k:]
+        self.count[row] += scores.shape[0]
+
+    def n(self, rows: np.ndarray) -> np.ndarray:
+        return np.minimum(self.count[rows], self.capacity)
+
+    def scales(self, rows: np.ndarray, q, fallback) -> np.ndarray:
+        """Calibrated ``q_hat`` per row; ``fallback`` where empty.
+
+        Rows are padded to a power-of-two bucket so the jitted quantile
+        kernel compiles O(log n) times per capacity, not per batch size
+        (same convention as the engine's forecast path).
+        """
+        m = rows.shape[0]
+        b = bucket_pow2(m)
+        spad = np.zeros((b, self.capacity), np.float32)
+        cpad = np.zeros((b,), np.int64)
+        spad[:m] = self.buf[rows]
+        cpad[:m] = self.count[rows]
+        qv = np.broadcast_to(np.asarray(q, np.float32), (m,))
+        fv = np.broadcast_to(np.asarray(fallback, np.float32), (m,))
+        qpad = np.zeros((b,), np.float32)
+        fpad = np.zeros((b,), np.float32)
+        qpad[:m], fpad[:m] = qv, fv
+        out = conformal_scale(jnp.asarray(spad), jnp.asarray(cpad),
+                              jnp.asarray(qpad), jnp.asarray(fpad))
+        # np.array (not asarray): device output buffers are read-only
+        # and callers overwrite the fallback rows in place
+        return np.array(out)[:m]
+
+
+class ConformalForecaster:
+    """Wrap any :class:`~repro.core.forecast.base.Forecaster` with
+    online split-conformal calibration.
+
+    The wrapper is a streaming loop per series::
+
+        fc = wrapper.forecast(window, horizon, series=i)   # predict
+        up = wrapper.upper(fc, series=i)                   # calibrated bound
+        ...one tick later...
+        wrapper.observe(y_next, series=i)                  # score residual
+
+    ``forecast`` passes through to the base model unchanged (the mean /
+    variance stay the paper's §3.1 outputs); ``observe`` scores the
+    1-step-ahead prediction against the realized value and feeds the
+    ring; ``upper`` replaces the Gaussian ``z(q)`` multiplier with the
+    calibrated score quantile once ``min_scores`` have accumulated.
+    """
+
+    def __init__(self, base, cfg: CalibrationConfig = CalibrationConfig(),
+                 n_series: int = 1):
+        self.base = base
+        self.cfg = cfg
+        self.scores = ScoreBuffer(n_series, cfg.capacity)
+        self._pend_mean = np.zeros((n_series,), np.float32)
+        self._pend_sigma = np.ones((n_series,), np.float32)
+        self._has_pend = np.zeros((n_series,), bool)
+
+    def forecast(self, window, horizon: int, *, series: int = 0,
+                 valid=None):
+        fc = self.base.forecast(window, horizon, valid=valid)
+        self._pend_mean[series] = float(fc.mean[0])
+        self._pend_sigma[series] = max(float(fc.sigma[0]), 1e-9)
+        self._has_pend[series] = True
+        return fc
+
+    def observe(self, y: float, *, series: int = 0) -> float | None:
+        """Score the outstanding 1-step prediction; returns the score."""
+        if not self._has_pend[series]:
+            return None
+        s = (float(y) - self._pend_mean[series]) / self._pend_sigma[series]
+        self.scores.push(np.asarray([series]), np.asarray([s], np.float32))
+        self._has_pend[series] = False
+        return s
+
+    def scale(self, *, series: int = 0, q: float | None = None) -> float:
+        """Calibrated sigma-multiplier (Gaussian z until ``min_scores``)."""
+        q = self.cfg.q if q is None else q
+        gauss = float(gaussian_quantile_scale(q))
+        rows = np.asarray([series])
+        if int(self.scores.n(rows)[0]) < self.cfg.min_scores:
+            return gauss
+        return float(self.scores.scales(rows, q, gauss)[0])
+
+    def upper(self, fc, *, series: int = 0, q: float | None = None):
+        """Distribution-free upper band: mean + q_hat(q) * sigma."""
+        return fc.mean + self.scale(series=series, q=q) * fc.sigma

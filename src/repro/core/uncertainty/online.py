@@ -1,0 +1,172 @@
+"""Online calibration loop for the simulation engine / live shaper.
+
+Bridges the engine's tick loop and the conformal machinery: every
+monitored component series (one per (slot, resource), exactly the rows
+of the engine's stacked forecast batch) gets
+
+  * one *outstanding prediction* at a time — the safeguard's deployed
+    upper bound ``mean + scale * sigma`` over the forecast horizon;
+  * a nonconformity-score ring fed when that prediction resolves.
+
+Because the safeguard protects against the *peak* over the horizon
+(paper §4.2), the score compares the realized running maximum over the
+next ``horizon`` ticks against the predicted peak:
+
+    s = (max_{k<=h} y_{t+k} - mean_t) / sigma_t
+
+resolved h ticks after the forecast.  Monitor resets (admission,
+eviction, preemption) invalidate an outstanding prediction via the
+monitor's own sample counter: a resolution is only scored when the
+series aged exactly ``horizon`` samples since the forecast, which a
+reset makes impossible (counts restart at zero and shaping waits out
+the grace period — paper §5).
+
+State is host-side NumPy ring buffers (the Monitor convention); the
+quantile evaluation is one padded jitted JAX call per tick via
+:class:`~repro.core.uncertainty.conformal.ScoreBuffer`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.uncertainty.adaptive import QuantileController
+from repro.core.uncertainty.conformal import CalibrationConfig, ScoreBuffer
+
+__all__ = ["OnlineCalibrator"]
+
+
+class OnlineCalibrator:
+    """Per-series online split-conformal calibration for the engine.
+
+    ``n_series`` rows follow the engine's forecast-batch layout: CPU
+    rows ``0 .. M-1`` then MEM rows ``M .. 2M-1`` where ``M`` is the
+    monitor slot count; ``observe`` takes the monitor's per-slot sample
+    counts (length ``M``) and tiles them.
+    """
+
+    def __init__(self, n_series: int, horizon: int, fallback: float,
+                 cfg: CalibrationConfig):
+        self.cfg = cfg
+        self.horizon = int(horizon)
+        self.fallback = float(fallback)
+        self.scores = ScoreBuffer(n_series, cfg.capacity)
+        # fleet-wide pooled ring: the middle tier of the fallback
+        # hierarchy (series ring -> pool -> K2) for young series
+        self.pooled = (ScoreBuffer(1, cfg.pool_capacity)
+                       if cfg.pool else None)
+        self.controller = QuantileController(cfg) if cfg.adaptive else None
+        z = lambda dt: np.zeros((n_series,), dt)  # noqa: E731
+        self._mean, self._sigma, self._scale = z(np.float32), z(np.float32), z(np.float32)
+        self._peak = z(np.float32)      # running max of realized usage
+        self._left = z(np.int64)        # ticks to resolution; 0 = idle
+        self._due = z(np.int64)         # expected monitor count at resolution
+        # telemetry
+        self.resolved = 0
+        self.errors = 0
+        self.dropped = 0                # invalidated by a series reset
+        self._scale_sum = 0.0
+        self._scale_n = 0
+
+    # -- target level --------------------------------------------------
+    @property
+    def q(self) -> float:
+        return self.controller.q if self.controller is not None else self.cfg.q
+
+    # -- tick loop ------------------------------------------------------
+    def observe(self, usage: np.ndarray, mon_count: np.ndarray) -> None:
+        """Advance outstanding predictions with this tick's usage.
+
+        ``usage``: (n_series,) realized utilization (CPU rows then MEM
+        rows); ``mon_count``: (M,) monitor sample counts, M = n_series/2.
+        Call once per tick, after monitor sampling and before shaping.
+        """
+        act = self._left > 0
+        if not act.any():
+            return
+        np.maximum(self._peak, usage, where=act, out=self._peak)
+        self._left[act] -= 1
+        fire = act & (self._left == 0)
+        if not fire.any():
+            return
+        counts = np.concatenate([mon_count, mon_count])
+        ok = fire & (counts == self._due)
+        self.dropped += int(fire.sum() - ok.sum())
+        rows = np.nonzero(ok)[0]
+        if rows.size == 0:
+            return
+        sig = np.maximum(self._sigma[rows], 1e-6)
+        s = (self._peak[rows] - self._mean[rows]) / sig
+        self.scores.push(rows, s.astype(np.float32))
+        if self.pooled is not None:
+            self.pooled.push_many(0, s.astype(np.float32))
+        err = self._peak[rows] > (self._mean[rows]
+                                  + self._scale[rows] * self._sigma[rows])
+        self.resolved += rows.size
+        self.errors += int(err.sum())
+        if self.controller is not None:
+            self.controller.update(err)
+
+    def begin(self, rows: np.ndarray, mean: np.ndarray, sigma: np.ndarray,
+              scale: np.ndarray, mon_count: np.ndarray) -> None:
+        """Register deployed predictions for ``rows`` (batch layout).
+
+        Rows with an outstanding prediction keep it — calibration
+        samples the forecast stream at horizon stride instead of scoring
+        overlapping horizons (which would double-count excursions).
+        ``mon_count``: per-ROW monitor counts (already gathered).
+        """
+        free = self._left[rows] == 0
+        r = rows[free]
+        if r.size == 0:
+            return
+        self._mean[r] = mean[free]
+        self._sigma[r] = sigma[free]
+        self._scale[r] = scale[free]
+        self._peak[r] = -np.inf
+        self._left[r] = self.horizon
+        self._due[r] = mon_count[free] + self.horizon
+
+    def scales(self, rows: np.ndarray) -> np.ndarray:
+        """Calibrated sigma-multipliers for ``rows``.
+
+        Hierarchy: the series' own score quantile once ``min_scores``
+        accumulated; else the fleet-wide pooled quantile (if enabled and
+        itself warm); else the uncalibrated K2 fallback.
+        """
+        out = self.scores.scales(rows, self.q, self.fallback)
+        young = self.scores.n(rows) < self.cfg.min_scores
+        if young.any():
+            fb = self.fallback
+            if (self.pooled is not None
+                    and int(self.pooled.n(np.asarray([0]))[0])
+                    >= self.cfg.min_scores):
+                fb = float(self.pooled.scales(np.asarray([0]), self.q,
+                                              self.fallback)[0])
+            out[young] = fb
+        self._scale_sum += float(out.sum())
+        self._scale_n += rows.size
+        return out
+
+    # -- telemetry ------------------------------------------------------
+    def report(self) -> dict:
+        """JSON-ready summary block (``SimResults.calibration``)."""
+        live = np.minimum(self.scores.count, self.scores.capacity)
+        return {
+            "q_target": round(float(self.q), 4),
+            "q_initial": self.cfg.q,
+            "adaptive": bool(self.cfg.adaptive),
+            "budget": self.cfg.budget,
+            "resolved": int(self.resolved),
+            "miscovered": int(self.errors),
+            "coverage": (round(1.0 - self.errors / self.resolved, 4)
+                         if self.resolved else None),
+            "dropped": int(self.dropped),
+            "scores_recorded": int(self.scores.count.sum()),
+            "series_warm": int((live >= self.cfg.min_scores).sum()),
+            "pool_warm": bool(
+                self.pooled is not None
+                and int(self.pooled.n(np.asarray([0]))[0])
+                >= self.cfg.min_scores),
+            "mean_scale": (round(self._scale_sum / self._scale_n, 4)
+                           if self._scale_n else None),
+        }

@@ -1,0 +1,132 @@
+"""Proper-scoring metrics for predictive distributions (paper §3.1).
+
+The paper's forecasters emit a predictive mean + *variance* (Eq. 8 for
+the GP, the psi-weight MSE identity for ARIMA) and the safeguard buffer
+(Eq. 9) turns that variance into an actionable band.  Whether the band
+is *trustworthy* is a calibration question, and these are the standard
+instruments for answering it:
+
+  * ``empirical_coverage``  — fraction of outcomes under a predicted
+    upper bound (compare against the nominal quantile level);
+  * ``pinball_loss``        — the proper scoring rule for a single
+    quantile (minimized in expectation by the true quantile);
+  * ``crps_gaussian``       — closed-form CRPS of a Gaussian predictive
+    distribution (the paper's §3.1 distributional assumption);
+  * ``crps_empirical``      — sample-based CRPS for distribution-free
+    predictive ensembles (what conformal calibration produces).
+
+Everything is pure ``jnp``, elementwise/reduction only — jittable and
+``vmap``-batchable over fleets of series, like the forecasters.
+``sigma_from_var`` is the ONE place predictive variance becomes a
+standard deviation (the clamp used to be copy-pasted across
+``forecast/base.py`` and ``shaper/safeguard.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.scipy.special import ndtri
+
+Array = jax.Array
+
+__all__ = ["sigma_from_var", "sigma_from_var_np", "bucket_pow2",
+           "gaussian_quantile_scale", "empirical_coverage", "pinball_loss",
+           "crps_gaussian", "crps_empirical"]
+
+
+def sigma_from_var(var: Array) -> Array:
+    """Predictive standard deviation from predictive variance.
+
+    Forecaster variances can round to tiny negatives under float32
+    accumulation; the clamp keeps sigma well-defined without inflating
+    honest zero-variance (oracle) forecasts.
+    """
+    return jnp.sqrt(jnp.maximum(var, 0.0))
+
+
+def sigma_from_var_np(var: np.ndarray) -> np.ndarray:
+    """Host-side (NumPy) twin of :func:`sigma_from_var` — same clamp
+    semantics, no device round-trip, for the engines' tick loops."""
+    return np.sqrt(np.maximum(var, 0.0))
+
+
+def bucket_pow2(n: int, base: int = 64) -> int:
+    """Smallest power-of-two batch bucket >= n (never below ``base``).
+
+    The shared padding convention of every jitted batch path (forecast
+    peaks, shaped demand, conformal quantiles): padding to buckets keeps
+    each kernel at O(log n) compilations per shape family instead of one
+    per distinct tick batch size.
+    """
+    b = base
+    while b < n:
+        b *= 2
+    return b
+
+
+def gaussian_quantile_scale(q) -> Array:
+    """z such that  mean + z * sigma  is the Gaussian q-quantile.
+
+    This is the sigma-multiplier a *distributional* K2 corresponds to:
+    K2 = gaussian_quantile_scale(q) assumes the predictive residuals
+    are Gaussian — the assumption conformal calibration removes.
+    """
+    return ndtri(jnp.asarray(q, jnp.float32))
+
+
+def empirical_coverage(y: Array, upper: Array,
+                       where: Array | None = None) -> Array:
+    """Fraction of outcomes ``y <= upper`` (scalar in [0, 1]).
+
+    Compare against the nominal quantile level: a q = 0.9 upper bound
+    is calibrated iff coverage ~= 0.9.  ``where`` masks invalid rows.
+    """
+    hit = (y <= upper).astype(jnp.float32)
+    if where is None:
+        return hit.mean()
+    w = where.astype(jnp.float32)
+    return (hit * w).sum() / jnp.maximum(w.sum(), 1.0)
+
+
+def pinball_loss(y: Array, pred_q: Array, q) -> Array:
+    """Mean pinball (quantile) loss of predicted q-quantiles ``pred_q``.
+
+    rho_q(u) = u * (q - 1[u < 0]),  u = y - pred_q.  A proper scoring
+    rule: the expected loss is minimized by the true q-quantile, so a
+    lower value means a better-placed band at the SAME nominal level.
+    """
+    q = jnp.asarray(q, jnp.float32)
+    u = y - pred_q
+    return jnp.mean(jnp.maximum(q * u, (q - 1.0) * u))
+
+
+def crps_gaussian(y: Array, mean: Array, var: Array) -> Array:
+    """Closed-form CRPS of N(mean, var) predictions, averaged over y.
+
+    CRPS(N(m, s^2), y) = s * (z (2 Phi(z) - 1) + 2 phi(z) - 1/sqrt(pi)),
+    z = (y - m) / s.  Strictly proper: it rewards both sharpness and
+    calibration, which is why the calibration bench reports it next to
+    coverage (coverage alone can be gamed by arbitrarily wide bands).
+    """
+    sigma = jnp.maximum(sigma_from_var(var), 1e-9)
+    z = (y - mean) / sigma
+    phi = jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
+    cdf = 0.5 * (1.0 + jax.scipy.special.erf(z / jnp.sqrt(2.0)))
+    return jnp.mean(sigma * (z * (2.0 * cdf - 1.0) + 2.0 * phi
+                             - 1.0 / jnp.sqrt(jnp.pi)))
+
+
+def crps_empirical(y: Array, samples: Array) -> Array:
+    """Sample-based CRPS, averaged over y.
+
+    ``samples`` is (n_samples,) or (batch, n_samples) — an ensemble
+    representing the predictive distribution (e.g. mean + sigma *
+    calibrated score quantiles).  Uses the energy form
+    CRPS = E|X - y| - 0.5 E|X - X'|, exact for the empirical CDF.
+    """
+    if samples.ndim == 1:
+        samples = jnp.broadcast_to(samples, (y.shape[0], samples.shape[0]))
+    term1 = jnp.abs(samples - y[:, None]).mean(axis=1)
+    term2 = jnp.abs(samples[:, :, None] - samples[:, None, :]).mean((1, 2))
+    return jnp.mean(term1 - 0.5 * term2)

@@ -11,7 +11,13 @@ Per tick:
      future utilization (mean + variance), the safeguard buffer (Eq. 9)
      turns it into a shaped demand, and the shaping policy (baseline /
      optimistic / pessimistic Algorithm 1) computes allocations +
-     preemptions, which are applied through the preemption primitives;
+     preemptions, which are applied through the preemption primitives.
+     With ``SimConfig.calibration`` enabled, Eq. 9's dynamic term uses
+     an online split-conformal quantile instead of the fixed K2
+     sigma-multiplier (``repro.core.uncertainty``): realized peaks are
+     scored against deployed bounds each tick and the calibrated scale
+     tracks the target coverage.  Disabled (the default), the path is
+     bit-identical to ``engine_ref``;
   5. the OS OOM handler fires for any host whose true usage exceeds
      capacity (the uncontrolled-failure channel);
   6. the scheduler admits queued apps into freed capacity and re-places
@@ -50,7 +56,9 @@ from repro.core.forecast import (ARIMAConfig, ARIMAForecaster, GPConfig,
                                  GPForecaster)
 from repro.core.monitor import Monitor
 from repro.core.shaper import (POLICIES, SafeguardConfig, ShapeProblem,
-                               shaped_demand)
+                               shaped_demand, shaped_demand_scaled)
+from repro.core.uncertainty import (CalibrationConfig, OnlineCalibrator,
+                                    bucket_pow2, sigma_from_var_np)
 from repro.sim.cluster import CPU, MEM, Cluster, ClusterConfig
 from repro.sim.metrics import SimResults
 from repro.sim.scenarios.registry import build_trace
@@ -64,6 +72,10 @@ class SimConfig:
     policy: str = "pessimistic"          # baseline | optimistic | pessimistic
     forecaster: str = "gp"               # oracle | gp | arima | persist
     safeguard: SafeguardConfig = SafeguardConfig()
+    # conformal calibration of the safeguard's dynamic term (disabled by
+    # default — the legacy K2-sigma path stays bit-identical to
+    # engine_ref; see repro.core.uncertainty)
+    calibration: CalibrationConfig = CalibrationConfig()
     window: int = 24                     # monitor window (ticks)
     grace: int = 10                      # grace period (paper §5: 10 min)
     horizon: int = 3                     # forecast look-ahead (ticks)
@@ -73,11 +85,10 @@ class SimConfig:
     work_lost_on_kill: bool = True       # kill primitive loses all work
 
 
-def _bucket(n: int) -> int:
-    b = 64
-    while b < n:
-        b *= 2
-    return b
+# power-of-two padding for every jitted batch path (the shared
+# convention lives in repro.core.uncertainty.scoring; engine_ref keeps
+# its own frozen copy by design)
+_bucket = bucket_pow2
 
 
 def _make_model(cfg: SimConfig):
@@ -189,9 +200,28 @@ def _shaped_demand_padded(peak: np.ndarray, req: np.ndarray,
     return np.asarray(shaped_demand(pad(peak), pad(req), pad(var), sg))[:n]
 
 
+def _shaped_demand_scaled_padded(peak: np.ndarray, req: np.ndarray,
+                                 var: np.ndarray, k1: float,
+                                 scale: np.ndarray) -> np.ndarray:
+    """Bucket-padded ``shaped_demand_scaled`` (conformal safeguard)."""
+    n = peak.shape[0]
+    b = _bucket(n)
+
+    def pad(a):
+        if b == n:
+            return a
+        z = np.zeros((b,) + a.shape[1:], a.dtype)
+        z[:n] = a
+        return z
+
+    out = shaped_demand_scaled(pad(peak), pad(req), pad(var),
+                               np.float32(k1), pad(scale.astype(np.float32)))
+    return np.asarray(out)[:n]
+
+
 def _shape_decisions(cfg: SimConfig, cl: Cluster, wl: Workload, mon: Monitor,
                      fc, policy_fn, submit0: np.ndarray, run: np.ndarray,
-                     t: float, tick: float):
+                     t: float, tick: float, calib=None):
     """Forecast -> safeguard -> Algorithm 1 for one tick (shared by the
     vectorized and reference engines).  Returns numpy
     (kill_app, kill_comp, alloc_cpu, alloc_mem)."""
@@ -221,11 +251,27 @@ def _shape_decisions(cfg: SimConfig, cl: Cluster, wl: Workload, mon: Monitor,
             vflat = np.concatenate([vmask, vmask])
             mean, var = fc(wflat, vflat)
             reqs = req[rc[0][sel], rc[1][sel]]     # (n, 2)
-            for r, off in ((CPU, 0), (MEM, n)):
-                sh = _shaped_demand_padded(
-                    mean[off:off + n], reqs[:, r], var[off:off + n],
-                    cfg.safeguard)
-                demand[rc[0][sel], rc[1][sel], r] = sh
+            if calib is None:
+                for r, off in ((CPU, 0), (MEM, n)):
+                    sh = _shaped_demand_padded(
+                        mean[off:off + n], reqs[:, r], var[off:off + n],
+                        cfg.safeguard)
+                    demand[rc[0][sel], rc[1][sel], r] = sh
+            else:
+                # conformal safeguard: per-series calibrated quantile
+                # replaces K2 (rows follow the batch layout: CPU then MEM)
+                M = mon.count.shape[0]
+                rows = np.concatenate([mslots[sel], M + mslots[sel]])
+                scale = calib.scales(rows)
+                for r, off in ((CPU, 0), (MEM, n)):
+                    sh = _shaped_demand_scaled_padded(
+                        mean[off:off + n], reqs[:, r], var[off:off + n],
+                        cfg.safeguard.k1, scale[off:off + n])
+                    demand[rc[0][sel], rc[1][sel], r] = sh
+                sigma = sigma_from_var_np(var).astype(np.float32)
+                counts = np.concatenate([mon.count[mslots[sel]]] * 2)
+                calib.begin(rows, mean.astype(np.float32), sigma,
+                            scale.astype(np.float32), counts)
 
     # build the fixed-size ShapeProblem over ALL slots
     dem_full = np.zeros((A, C, 2), np.float32)
@@ -277,6 +323,13 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None, *,
     res = SimResults(n_apps=N)
     tick = cfg.cluster.tick
     all_comps = np.arange(C)[None, :]     # broadcast helper for mon resets
+    # online conformal calibration (oracle forecasts are exact — there
+    # is no residual distribution to calibrate)
+    calib = None
+    if cfg.calibration.enabled and cfg.forecaster != "oracle":
+        calib = OnlineCalibrator(n_series=2 * A * C, horizon=cfg.horizon,
+                                 fallback=cfg.safeguard.k2,
+                                 cfg=cfg.calibration)
 
     queue: list[tuple[float, int]] = []   # (original submit, gid) sorted
     arrived = 0
@@ -320,6 +373,10 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None, *,
             rc = np.nonzero(cl.comp_running[run])  # (slot_i, c)
             mslots = run[rc[0]] * C + rc[1]
             mon.record(mslots, usage[run][rc][:, CPU], usage[run][rc][:, MEM])
+        if calib is not None:
+            calib.observe(np.concatenate([usage[:, :, CPU].ravel(),
+                                          usage[:, :, MEM].ravel()]),
+                          mon.count)
 
         # 4. shaping ------------------------------------------------------
         # two distinct kill channels (paper §4.2): controlled preemptions
@@ -329,7 +386,8 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None, *,
         oom_failed_this_tick: list[int] = []
         if cfg.policy != "baseline" and run.size:
             kill_app, kill_comp, alloc_cpu, alloc_mem = _shape_decisions(
-                cfg, cl, wl, mon, fc, policy_fn, submit0, run, t, tick)
+                cfg, cl, wl, mon, fc, policy_fn, submit0, run, t, tick,
+                calib=calib)
 
             kills = np.nonzero(kill_app & (cl.slot_gid >= 0))[0]
             if kills.size:
@@ -389,5 +447,7 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None, *,
         # 7. metrics -------------------------------------------------------
         res.record_tick(t, cl, usage)
 
+    if calib is not None:
+        res.calibration = calib.report()
     res.finalize(t)
     return res

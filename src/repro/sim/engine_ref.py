@@ -178,6 +178,13 @@ def _place_missing_elastic_reference(cl: Cluster, wl: Workload,
 def run_sim_reference(cfg: SimConfig, wl: Workload | None = None, *,
                       forecast_fn=None) -> SimResults:
     """Seed ``run_sim`` — one Python iteration per slot per tick."""
+    if cfg.calibration.enabled:
+        # the reference engine is the FROZEN seed loop; it predates (and
+        # must not grow) the conformal-safeguard path.  Refusing beats
+        # silently simulating a different policy than requested.
+        raise NotImplementedError(
+            "engine_ref has no conformal-calibration path; run the "
+            "vectorized engine or disable cfg.calibration")
     wl = wl if wl is not None else build_trace(cfg.workload)
     N, C = wl.n_apps, wl.max_components
     cl = Cluster(cfg.cluster, C)

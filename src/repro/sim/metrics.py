@@ -66,6 +66,10 @@ class SimResults:
     util_mem: list = dataclasses.field(default_factory=list)
     n_running: list = dataclasses.field(default_factory=list)
     sim_time: float = 0.0
+    # online conformal-calibration telemetry (engine fills this only
+    # when SimConfig.calibration is enabled, so legacy summaries — and
+    # the engine/engine_ref equivalence contract — are unchanged)
+    calibration: dict | None = None
 
     def record_completion(self, gid: int, submit: float, t: float) -> None:
         self.turnaround[int(gid)] = float(t - submit)
@@ -112,4 +116,6 @@ class SimResults:
             "full_preemptions": self.full_preemptions,
             "partial_preemptions": self.partial_preemptions,
         }
+        if self.calibration is not None:
+            out["calibration"] = self.calibration
         return out

@@ -13,18 +13,19 @@ import order works.
     from repro.sim.scenarios import build_trace, make_config
     tr = build_trace(make_config("flashcrowd", n_apps=200, seed=1))
 """
-from repro.sim.scenarios.schema import (SEGMENTS, Trace,
-                                        TraceValidationError, sort_by_submit)
+from repro.sim.scenarios import families as _families              # noqa: F401
+from repro.sim.scenarios import replay as _replay                  # noqa: F401
+from repro.sim.scenarios.diagnostics import (coverage_report,
+                                             forecast_error_report,
+                                             sample_usage_series)
+from repro.sim.scenarios.families import (ColocatedConfig, DiurnalConfig,
+                                          FlashcrowdConfig, HeavytailConfig)
 from repro.sim.scenarios.registry import (ScenarioSpec, build_trace, get,
                                           make_config, register,
                                           scenario_names, scenario_of)
-from repro.sim.scenarios import families as _families              # noqa: F401
-from repro.sim.scenarios import replay as _replay                  # noqa: F401
-from repro.sim.scenarios.families import (ColocatedConfig, DiurnalConfig,
-                                          FlashcrowdConfig, HeavytailConfig)
 from repro.sim.scenarios.replay import ReplayConfig, load_trace, save_trace
-from repro.sim.scenarios.diagnostics import (forecast_error_report,
-                                             sample_usage_series)
+from repro.sim.scenarios.schema import (SEGMENTS, Trace,
+                                        TraceValidationError, sort_by_submit)
 
 __all__ = [
     "SEGMENTS", "Trace", "TraceValidationError", "sort_by_submit",
@@ -32,5 +33,5 @@ __all__ = [
     "make_config", "build_trace",
     "DiurnalConfig", "FlashcrowdConfig", "HeavytailConfig",
     "ColocatedConfig", "ReplayConfig", "load_trace", "save_trace",
-    "forecast_error_report", "sample_usage_series",
+    "coverage_report", "forecast_error_report", "sample_usage_series",
 ]

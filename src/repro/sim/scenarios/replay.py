@@ -40,6 +40,66 @@ COLUMNS = ("app_id", "submit", "runtime", "is_elastic", "is_jumpy",
            "component", "is_core", "cpu_req", "mem_req",
            "cpu_levels", "mem_levels")
 
+# default 5-minute reading cadence of the Azure public VM traces, used
+# when a VM has a single reading (no inferable interval)
+_AZURE_DT_S = 300.0
+
+
+def _azure_rows(rows: list[dict]) -> list[dict]:
+    """Column-mapping preset for Azure-public-dataset-style VM traces.
+
+    Input: long format, one row per *reading* —
+
+        vmid, timestamp, corecount, memory, avgcpu [, avgmem]
+
+    (``timestamp`` in seconds, ``avgcpu``/``avgmem`` in percent of the
+    provisioned ``corecount`` cores / ``memory`` GB, the convention of
+    the AzurePublicDataset usage files).  Each VM becomes one rigid
+    single-component app: first reading = submission, reading span =
+    runtime, utilization series = the readings scaled to fractions
+    (resampled to the engine's knots by the normal replay path).  The
+    Azure traces carry no memory utilization; absent ``avgmem``, memory
+    levels default to a flat 50% of the reservation.
+    """
+    by_vm: dict = {}
+    for r in rows:
+        by_vm.setdefault(str(r["vmid"]), []).append(r)
+    out = []
+    for vmid, rs in by_vm.items():
+        rs = sorted(rs, key=lambda r: float(r["timestamp"]))
+        ts = np.asarray([float(r["timestamp"]) for r in rs])
+        dt = float(np.median(np.diff(ts))) if ts.size > 1 else _AZURE_DT_S
+        cpu = [min(max(float(r["avgcpu"]) / 100.0, 0.0), 1.0) for r in rs]
+
+        def mem_level(r):
+            # per-reading: blank / missing / NaN cells (the Azure traces
+            # carry no memory readings at all) -> flat 50% default
+            v = r.get("avgmem")
+            if v in ("", None):
+                return 0.5
+            v = float(v)
+            return 0.5 if v != v else min(max(v / 100.0, 0.0), 1.0)
+
+        mem = [mem_level(r) for r in rs]
+        out.append({
+            "app_id": vmid,
+            "submit": ts[0],
+            "runtime": max(ts[-1] - ts[0] + dt, dt),
+            "is_elastic": 0,
+            "is_jumpy": 0,
+            "component": 0,
+            "is_core": 1,
+            "cpu_req": float(rs[0]["corecount"]),
+            "mem_req": float(rs[0]["memory"]),
+            "cpu_levels": ";".join(str(v) for v in cpu),
+            "mem_levels": ";".join(str(v) for v in mem),
+        })
+    return out
+
+
+# preset name -> raw-row transform into the canonical replay columns
+PRESETS = {"azure": _azure_rows}
+
 
 @dataclasses.dataclass(frozen=True)
 class ReplayConfig:
@@ -49,12 +109,15 @@ class ReplayConfig:
     every scenario config; a replayed trace is identical across seeds.
     ``n_apps`` > 0 truncates to the first N applications (by submission
     time); ``max_components`` > 0 overrides the inferred component
-    padding (it must cover the widest app).
+    padding (it must cover the widest app).  ``preset`` selects a
+    column-mapping for foreign trace formats (currently ``"azure"`` for
+    Azure-public-dataset-style VM readings).
     """
     path: str = ""
     n_apps: int = 0
     max_components: int = 0
     seed: int = 0
+    preset: str = ""
 
 
 def _fmt_levels(row: np.ndarray) -> str:
@@ -116,11 +179,27 @@ def _read_rows(path: str) -> list[dict]:
 
 
 def load_trace(path: str, n_apps: int = 0, max_components: int = 0,
-               cfg: ReplayConfig | None = None) -> Trace:
-    """Parse a replay file into a schema-valid Trace."""
+               cfg: ReplayConfig | None = None,
+               preset: str | None = None) -> Trace:
+    """Parse a replay file into a schema-valid Trace.
+
+    ``preset`` maps a foreign column layout onto the canonical replay
+    columns before parsing — e.g. ``preset="azure"`` ingests Azure-VM-
+    trace-style long-format readings (see :data:`PRESETS`).  When not
+    given explicitly it defaults to ``cfg.preset``.
+    """
+    if preset is None and cfg is not None and cfg.preset:
+        preset = cfg.preset
+    if preset:
+        transform = PRESETS.get(preset)
+        if transform is None:
+            raise ValueError(f"unknown replay preset {preset!r} "
+                             f"(available: {sorted(PRESETS)})")
     if not os.path.exists(path):
         raise FileNotFoundError(f"replay trace not found: {path}")
     rows = _read_rows(path)
+    if preset:
+        rows = transform(rows)
     if not rows:
         raise ValueError(f"replay trace {path} is empty")
 

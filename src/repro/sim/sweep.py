@@ -54,7 +54,8 @@ from repro.sim.engine import (SimConfig, _BatchedForecaster, _make_model,
                               forecast_peaks, run_sim)
 from repro.sim.metrics import aggregate_summaries, trace_stats
 from repro.sim.scenarios import build_trace, make_config, scenario_of
-from repro.sim.scenarios.diagnostics import forecast_error_report
+from repro.sim.scenarios.diagnostics import (coverage_report,
+                                             forecast_error_report)
 from repro.sim.workload import WorkloadConfig
 
 __all__ = ["SweepCell", "SweepResult", "ForecastBatcher", "expand_grid",
@@ -75,6 +76,17 @@ def _set_path(cfg: Any, path: str, value: Any) -> Any:
     return dataclasses.replace(cfg, **{head: value})
 
 
+# the "calibration" axis sweeps safeguard *modes* by name: the paper's
+# fixed K2-sigma band, the conformal calibrated band, and the adaptive
+# (budget-tracking) controller.  Field-level knobs remain reachable via
+# dotted paths ("calibration.q", "calibration.budget", ...).
+CALIBRATION_MODES: dict[str, dict] = {
+    "sigma": dict(enabled=False, adaptive=False),
+    "conformal": dict(enabled=True, adaptive=False),
+    "adaptive": dict(enabled=True, adaptive=True),
+}
+
+
 def _apply_overrides(cfg: SimConfig, overrides: Mapping[str, Any]) -> SimConfig:
     # "scenario" swaps the whole workload config and must resolve before
     # any "workload.*" field override can land on the new family
@@ -84,6 +96,15 @@ def _apply_overrides(cfg: SimConfig, overrides: Mapping[str, Any]) -> SimConfig:
                                       base=cfg.workload))
     for path, value in overrides.items():
         if path == "scenario":
+            continue
+        if path == "calibration" and isinstance(value, str):
+            if value not in CALIBRATION_MODES:
+                raise ValueError(
+                    f"unknown calibration mode {value!r} "
+                    f"(expected {sorted(CALIBRATION_MODES)})")
+            cfg = dataclasses.replace(
+                cfg, calibration=dataclasses.replace(
+                    cfg.calibration, **CALIBRATION_MODES[value]))
             continue
         cfg = _set_path(cfg, path, value)
     return cfg
@@ -120,15 +141,18 @@ def expand_grid(base: SimConfig,
     combos: list[dict] = []
     axis_items = list((axes or {}).items())
     keys = [k if isinstance(k, tuple) else (k,) for k, _ in axis_items]
-    for values in itertools.product(*(v for _, v in axis_items)):
-        combo: dict = {}
-        for ks, v in zip(keys, values):
-            vs = v if isinstance(v, tuple) else (v,)
-            if len(ks) != len(vs):
-                raise ValueError(f"axis {ks} expects {len(ks)}-tuples, "
-                                 f"got {v!r}")
-            combo.update(zip(ks, vs))
-        combos.append(combo)
+    # no axes + explicit cells = a cells-only grid (the zero-axis product
+    # would otherwise smuggle in a spurious bare-base combo)
+    if axis_items or not cells:
+        for values in itertools.product(*(v for _, v in axis_items)):
+            combo: dict = {}
+            for ks, v in zip(keys, values):
+                vs = v if isinstance(v, tuple) else (v,)
+                if len(ks) != len(vs):
+                    raise ValueError(f"axis {ks} expects {len(ks)}-tuples, "
+                                     f"got {v!r}")
+                combo.update(zip(ks, vs))
+            combos.append(combo)
     combos.extend(dict(c) for c in cells or ())
 
     out = []
@@ -165,15 +189,32 @@ class ForecastBatcher:
     Sims sharing a forecaster model (same frozen config, horizon, window
     width) land in the same batch key.  The first requester of a round
     becomes the leader: it waits until every *registered* sim of that key
-    has a request pending (or ``wait_s`` elapses — a sim in its grace
+    has a request pending (or a timeout elapses — a sim in its grace
     period requests nothing), concatenates the windows, runs ONE padded
     forecast through the shared jit cache, and distributes the row
     slices.  Rows are computed independently by the vmapped models, so
     every sim receives bit-identical values to a solo run.
+
+    Two batching modes (results are identical either way — the mode only
+    trades wall-clock against batch occupancy):
+
+    * ``leader`` (default): the leader waits at most ``wait_s`` (2 ms) —
+      low latency, but heterogeneous grids often fire partial cohorts;
+    * ``barrier``: tick-synchronous — the leader waits up to
+      ``barrier_timeout_s`` for the FULL registered cohort, so
+      homogeneous grids (same forecaster/shape across cells, sims
+      ticking in lockstep) batch whole rounds instead of whatever
+      arrived within 2 ms.  The generous timeout is a liveness
+      safety-net for cells still inside their grace period.
     """
 
-    def __init__(self, wait_s: float = 0.002):
-        self._wait_s = wait_s
+    def __init__(self, wait_s: float = 0.002, mode: str = "leader",
+                 barrier_timeout_s: float = 0.25):
+        if mode not in ("leader", "barrier"):
+            raise ValueError(f"unknown batch mode {mode!r} "
+                             "(expected 'leader' or 'barrier')")
+        self._wait_s = wait_s if mode == "leader" else barrier_timeout_s
+        self.mode = mode
         self._cond = threading.Condition()
         self._pending: dict = {}    # key -> list[_Request] (current round)
         self._clients: dict = {}    # key -> registered sim count
@@ -280,15 +321,19 @@ class SweepResult:
     scenarios: dict = dataclasses.field(default_factory=dict)
     # per-(scenario, forecaster) rolling forecast-error diagnostics
     forecast_error: list = dataclasses.field(default_factory=list)
+    # per-(scenario, forecaster) Gaussian-vs-conformal coverage
+    # diagnostics (schema 3; attached when the grid sweeps calibration)
+    calibration: list = dataclasses.field(default_factory=list)
 
     def to_json(self) -> dict:
         return {
-            "schema": 2,
+            "schema": 3,
             "base": self.base,
             "cells": self.cells,
             "aggregates": self.aggregates,
             "scenarios": self.scenarios,
             "forecast_error": self.forecast_error,
+            "calibration": self.calibration,
             "wall_s": self.wall_s,
             "forecast_batches": self.forecast_batches,
             "forecast_requests": self.forecast_requests,
@@ -338,6 +383,8 @@ def run_grid(base: SimConfig,
              workers: int | None = None,
              engine: str = "vectorized",
              batch_forecasts: bool = True,
+             batch_mode: str = "leader",
+             barrier_timeout_s: float = 0.25,
              out_path: str | None = None,
              expect_completed: bool = False,
              forecast_diag: bool = True) -> SweepResult:
@@ -352,6 +399,15 @@ def run_grid(base: SimConfig,
     (scenario, forecaster) pair in the grid — computed on series sampled
     from the scenario's ground-truth profiles, entirely outside the
     engines, so simulation results stay bit-identical either way.
+    Grids that sweep calibration (a ``calibration`` axis or any
+    calibration-enabled cell) additionally get one Gaussian-vs-conformal
+    coverage record per pair (``result.calibration``) — like the
+    forecast-error records, these are skipped when ``forecast_diag`` is
+    off.
+
+    ``batch_mode`` selects the forecast batcher's cohort policy
+    (``"leader"`` = 2 ms leader timeout, ``"barrier"`` =
+    tick-synchronous full-cohort rounds for homogeneous grids).
     """
     from concurrent.futures import ThreadPoolExecutor
 
@@ -365,7 +421,9 @@ def run_grid(base: SimConfig,
         run_fn = run_sim_reference
     else:
         raise ValueError(f"unknown engine {engine!r}")
-    batcher = ForecastBatcher() if batch_forecasts else None
+    batcher = (ForecastBatcher(mode=batch_mode,
+                               barrier_timeout_s=barrier_timeout_s)
+               if batch_forecasts else None)
 
     # one trace per unique scenario config: many cells share a
     # (config, seed) point and the engines never mutate a Trace, so
@@ -401,9 +459,14 @@ def run_grid(base: SimConfig,
         records = [one(c) for c in grid]
 
     # per-scenario trace statistics + forecast-error diagnostics (one
-    # record per (scenario, forecaster-model) pair seen in the grid)
+    # record per (scenario, forecaster-model) pair seen in the grid);
+    # grids with any calibration-ENABLED cell also get coverage
+    # diagnostics per pair (a sigma-only axis exercises no conformal
+    # code, so it pays for none)
+    sweeps_cal = any(c.cfg.calibration.enabled for c in grid)
     scen_stats: dict[str, dict] = {}
     diag: list[dict] = []
+    cal_diag: list[dict] = []
     seen_diag: set = set()
     for cell in grid:
         tr = workloads[cell.cfg.workload]
@@ -420,13 +483,18 @@ def run_grid(base: SimConfig,
                                     gp=c.gp, arima=c.arima)
         if rep is not None:
             diag.append({"scenario": cell.scenario, **rep})
+        if sweeps_cal:
+            cov = coverage_report(tr, c.forecaster, window=c.window,
+                                  gp=c.gp, arima=c.arima)
+            if cov is not None:
+                cal_diag.append({"scenario": cell.scenario, **cov})
 
     result = SweepResult(
         cells=records, aggregates=_aggregate(records),
         base=dataclasses.asdict(base), wall_s=round(time.time() - t0, 2),
         forecast_batches=batcher.batches if batcher else 0,
         forecast_requests=batcher.requests if batcher else 0,
-        scenarios=scen_stats, forecast_error=diag)
+        scenarios=scen_stats, forecast_error=diag, calibration=cal_diag)
     if out_path:
         result.write(out_path)
     return result
@@ -468,6 +536,14 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
                     help="safeguard K1 axis (e.g. 0.0,0.05,0.25)")
     ap.add_argument("--k2", type=_csv(float), default=None,
                     help="safeguard K2 axis (e.g. 0.0,1.0,3.0)")
+    ap.add_argument("--calibration", type=_csv(str), default=None,
+                    help="safeguard-mode axis, any of: sigma (Eq. 9 "
+                         "K2-band), conformal, adaptive")
+    ap.add_argument("--target-q", type=float, default=None,
+                    help="conformal target quantile (calibration.q)")
+    ap.add_argument("--budget", type=float, default=None,
+                    help="adaptive failure-rate budget "
+                         "(calibration.budget, target miscoverage)")
     ap.add_argument("--seeds", type=int, default=2,
                     help="number of workload seeds (0..N-1)")
     ap.add_argument("--apps", type=int, default=64)
@@ -478,14 +554,24 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
                     default="vectorized")
     ap.add_argument("--no-batch", action="store_true",
                     help="disable cross-sim forecast batching")
+    ap.add_argument("--batch-mode", choices=("leader", "barrier"),
+                    default="leader",
+                    help="forecast-batcher cohort policy: leader (2 ms "
+                         "timeout) or barrier (tick-synchronous full "
+                         "cohorts for homogeneous grids)")
     ap.add_argument("--no-diag", action="store_true",
-                    help="skip per-scenario forecast-error diagnostics")
+                    help="skip per-scenario forecast-error and coverage "
+                         "diagnostics")
     ap.add_argument("--out", default="BENCH_sweep.json")
     args = ap.parse_args(argv)
     if args.seeds < 1:
         ap.error("--seeds must be >= 1")
 
     base = quick_base_config(args.apps, args.hosts, args.components)
+    if args.target_q is not None:
+        base = _set_path(base, "calibration.q", args.target_q)
+    if args.budget is not None:
+        base = _set_path(base, "calibration.budget", args.budget)
     axes: dict = {}
     if args.scenario:
         axes["scenario"] = args.scenario
@@ -494,9 +580,12 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
         axes["safeguard.k1"] = args.k1
     if args.k2:
         axes["safeguard.k2"] = args.k2
+    if args.calibration:
+        axes["calibration"] = args.calibration
     result = run_grid(base, axes, seeds=range(args.seeds),
                       workers=args.workers, engine=args.engine,
                       batch_forecasts=not args.no_batch,
+                      batch_mode=args.batch_mode,
                       forecast_diag=not args.no_diag, out_path=args.out)
 
     print(f"# {len(result.cells)} cells in {result.wall_s:.1f}s "
@@ -512,6 +601,12 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
         print(f"# forecast_error {d['scenario']}/{d['forecaster']}: "
               f"median_abs_rel={d['abs_rel_err_median']:.3f} "
               f"median_|z|={d['median_abs_z']:.2f}")
+    for d in result.calibration:
+        lv = next((r for r in d["levels"] if abs(r["q"] - 0.9) < 1e-9),
+                  d["levels"][0])
+        print(f"# coverage {d['scenario']}/{d['forecaster']} "
+              f"q={lv['q']}: gaussian={lv['gaussian_coverage']:.3f} "
+              f"conformal={lv['conformal_coverage']:.3f}")
     return result
 
 

@@ -2,6 +2,7 @@
 workload statistics, replay round-trips, engine end-to-end runs, and
 the sweep's scenario axis."""
 import dataclasses
+import os
 
 import numpy as np
 import pytest
@@ -253,6 +254,44 @@ def test_replay_truncation_and_missing_file(tmp_path):
         load_trace(str(tmp_path / "absent.csv"))
 
 
+AZURE_FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                             "azure_tiny.csv")
+
+
+def test_replay_azure_preset_maps_vm_readings():
+    """The azure preset turns long-format VM readings into one rigid
+    single-component app per VM, with utilization fractions from the
+    percent readings and a flat 50% memory default where absent."""
+    tr = load_trace(AZURE_FIXTURE, preset="azure")
+    assert tr.n_apps == 3 and tr.max_components == 1
+    # sorted by first reading: vm-a (t=0), vm-b (t=300), vm-c (t=600)
+    np.testing.assert_allclose(tr.submit, [0.0, 300.0, 600.0])
+    # runtime spans the readings plus one inferred interval; vm-c has a
+    # single reading and falls back to the 5-minute Azure cadence
+    np.testing.assert_allclose(tr.runtime, [1500.0, 1800.0, 300.0])
+    np.testing.assert_allclose(tr.cpu_req.ravel(), [2.0, 4.0, 1.0])
+    np.testing.assert_allclose(tr.mem_req.ravel(), [8.0, 16.0, 4.0])
+    assert tr.is_core.all() and not tr.is_elastic.any()
+    # percent readings -> fractions, endpoints preserved by resampling
+    np.testing.assert_allclose(tr.levels[0, 0, 0, 0], 0.35, atol=1e-6)
+    np.testing.assert_allclose(tr.levels[0, 0, -1, 0], 0.20, atol=1e-6)
+    # vm-c has no avgmem readings -> flat 50% default
+    np.testing.assert_allclose(tr.levels[2, 0, :, 1], 0.5, atol=1e-6)
+
+
+def test_replay_azure_preset_via_scenario_config():
+    cfg = make_config("replay", path=AZURE_FIXTURE, preset="azure")
+    tr = build_trace(cfg)
+    res = run_sim(SimConfig(workload=cfg, policy="pessimistic",
+                            forecaster="persist", max_ticks=2000))
+    assert res.summary()["completed"] == tr.n_apps
+
+
+def test_replay_unknown_preset_rejected():
+    with pytest.raises(ValueError, match="preset"):
+        load_trace(AZURE_FIXTURE, preset="borg")
+
+
 # ----------------------------------------------------------------------
 # diagnostics
 # ----------------------------------------------------------------------
@@ -304,7 +343,7 @@ def test_sweep_scenario_axis_per_scenario_metrics(tmp_path):
     assert diag_keys == {("google", "persist"), ("flashcrowd", "persist")}
     import json
     data = json.loads(out.read_text())
-    assert data["schema"] == 2
+    assert data["schema"] == 3
     assert set(data["scenarios"]) == {"google", "flashcrowd"}
     assert len(data["forecast_error"]) == 2
 

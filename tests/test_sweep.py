@@ -133,7 +133,7 @@ def test_sweep_aggregates_and_artifact(tmp_path):
                          "forecaster": ["oracle"]},
                    seeds=[0, 1], out_path=str(out))
     data = json.loads(out.read_text())
-    assert data["schema"] == 2
+    assert data["schema"] == 3
     assert "google" in data["scenarios"]        # per-scenario trace stats
     assert len(data["cells"]) == 4 and len(data["aggregates"]) == 2
     for c in data["cells"]:
