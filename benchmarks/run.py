@@ -10,6 +10,8 @@
          policy); writes BENCH_scenarios.json
   calibration  Gaussian-vs-conformal safeguard study (coverage /
          turnaround / failure trade-offs); writes BENCH_calibration.json
+  engine  host-loop vs device-resident scan engine vs vmapped seed
+         cohort throughput; writes BENCH_engine.json
   kernels  Pallas kernel microbenches
   roofline dry-run-derived roofline table (if dryrun_results.json exists)
 
@@ -29,7 +31,7 @@ import time
 import traceback
 
 SECTIONS = ("fig2", "fig3", "fig4", "fig5", "scenarios", "calibration",
-            "kernels", "roofline")
+            "engine", "kernels", "roofline")
 
 
 def main() -> None:
@@ -64,6 +66,9 @@ def main() -> None:
             elif sec == "calibration":
                 from benchmarks import calibration
                 calibration.main(quick)
+            elif sec == "engine":
+                from benchmarks import engine
+                engine.run(quick)
             elif sec == "kernels":
                 from benchmarks import kernels
                 kernels.main(quick)

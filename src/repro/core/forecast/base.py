@@ -87,3 +87,30 @@ def batched(forecast_fn, windows: Array, horizon: int,
     def fn(w, v):
         return forecast_fn(w, horizon, valid=v)
     return jax.vmap(fn)(windows, valid)
+
+
+def peak_over_horizon(fc: Forecast) -> tuple[Array, Array]:
+    """(peak mean, its variance) from a batched ``(B, horizon)`` Forecast.
+
+    The paper's predictor outputs a *future peak* utilization (§4.2): we
+    take the max of the predictive path and carry that step's variance.
+    Shared by the host engines' jitted peak path and the fused scan
+    engine, so the two can never drift on this reduction.
+    """
+    k = jnp.argmax(fc.mean, axis=1)
+    peak = jnp.take_along_axis(fc.mean, k[:, None], 1)[:, 0]
+    pvar = jnp.take_along_axis(fc.var, k[:, None], 1)[:, 0]
+    return peak, pvar
+
+
+def persistence_peak(windows: Array, valid: Array) -> tuple[Array, Array]:
+    """The ``persist`` forecaster's (mean, var) over ``(B, W)`` windows.
+
+    Mean = last observation, var = masked window variance + 1e-6 —
+    jnp mirror of the host engines' NumPy path (same masked-moment
+    formula, so solo/batched/scan paths agree)."""
+    w = valid.astype(windows.dtype)
+    cnt = jnp.maximum(w.sum(axis=1), 1.0)
+    mu = (windows * w).sum(axis=1) / cnt
+    var = (((windows - mu[:, None]) ** 2) * w).sum(axis=1) / cnt
+    return windows[:, -1], var + 1e-6

@@ -1,10 +1,13 @@
 """Resource shaper (paper §3.2): shaping policies + safe-guard buffer."""
-from repro.core.shaper.baseline import baseline_shape
-from repro.core.shaper.optimistic import optimistic_shape
+from repro.core.shaper.baseline import baseline_shape, baseline_shape_raw
+from repro.core.shaper.optimistic import optimistic_shape, optimistic_shape_raw
 from repro.core.shaper.pessimistic import (ShapeDecision, ShapeProblem,
-                                           pessimistic_shape)
+                                           pessimistic_shape,
+                                           pessimistic_shape_raw)
 from repro.core.shaper.safeguard import (SafeguardConfig, beta,
-                                         shaped_demand, shaped_demand_scaled)
+                                         shaped_demand, shaped_demand_raw,
+                                         shaped_demand_scaled,
+                                         shaped_demand_scaled_raw)
 
 POLICIES = {
     "baseline": baseline_shape,
@@ -12,8 +15,18 @@ POLICIES = {
     "pessimistic": pessimistic_shape,
 }
 
+#: unjitted bodies, for fusing a whole tick (forecast -> safeguard ->
+#: policy -> OOM) into ONE jitted program (repro.sim.step)
+RAW_POLICIES = {
+    "baseline": baseline_shape_raw,
+    "optimistic": optimistic_shape_raw,
+    "pessimistic": pessimistic_shape_raw,
+}
+
 __all__ = [
     "ShapeProblem", "ShapeDecision", "pessimistic_shape",
-    "optimistic_shape", "baseline_shape", "POLICIES",
+    "optimistic_shape", "baseline_shape", "POLICIES", "RAW_POLICIES",
+    "pessimistic_shape_raw", "optimistic_shape_raw", "baseline_shape_raw",
     "SafeguardConfig", "beta", "shaped_demand", "shaped_demand_scaled",
+    "shaped_demand_raw", "shaped_demand_scaled_raw",
 ]

@@ -64,12 +64,10 @@ class ShapeDecision:
     mem_free: Array          # (H,)
 
 
-def _seg_sum(vals: Array, seg: Array, num: int) -> Array:
-    return jax.ops.segment_sum(vals, seg, num_segments=num)
-
-
-@jax.jit
-def pessimistic_shape(p: ShapeProblem) -> ShapeDecision:
+def pessimistic_shape_raw(p: ShapeProblem) -> ShapeDecision:
+    """Unjitted Algorithm 1 — inline this inside larger jitted programs
+    (the fused scan engine traces it once per tick chunk instead of
+    paying a separate dispatch per tick)."""
     A, C = p.comp_exists.shape
     H = p.host_cpu.shape[0]
 
@@ -79,52 +77,71 @@ def pessimistic_shape(p: ShapeProblem) -> ShapeDecision:
                           p.comp_alive, -jnp.inf)
     elastic_order = jnp.argsort(-alive_key, axis=1)          # (A, C)
 
-    def app_step(carry, a):
-        cpu_free, mem_free = carry
-        valid = (a >= 0) & p.app_exists[jnp.maximum(a, 0)]
-        a_ = jnp.maximum(a, 0)
-        exists = p.comp_exists[a_]
-        core = exists & p.comp_core[a_]
-        host = p.comp_host[a_]
+    # Everything the sequential pass needs is pre-gathered OUTSIDE the
+    # scan, batched over all apps: rows permuted into processing order,
+    # per-app core demand aggregated per host, elastic demands permuted
+    # into eviction order, and host one-hots materialized.  The scan
+    # body is then pure masked arithmetic — no dynamic gathers or
+    # scatters, which XLA CPU serializes (and which stay serial under
+    # the scan engine's vmap over seed cohorts).
+    a_all = jnp.maximum(p.app_order, 0)
+    valid_all = (p.app_order >= 0) & p.app_exists[a_all]
+    exists = p.comp_exists[a_all]                            # (A, C)
+    is_core = p.comp_core[a_all]
+    host = p.comp_host[a_all]
+    # cpu/mem fused on a trailing resource lane: halves the op count of
+    # the sequential passes (tiny-tensor op overhead dominates there)
+    row_dem = jnp.stack([p.comp_cpu[a_all], p.comp_mem[a_all]], -1)
+    core = exists & is_core
+    host_oh = host[:, :, None] == jnp.arange(H)[None, None, :]  # (A, C, H)
+    core_dem_all = jnp.where((core[:, :, None] & host_oh)[..., None],
+                             row_dem[:, :, None, :], 0.0).sum(1)  # (A, H, 2)
+    order = elastic_order[a_all]                             # (A, C)
+    ar = jnp.arange(A)[:, None]
+    ord_dem = row_dem[ar, order]                             # (A, C, 2)
+    ord_el = (exists & ~is_core)[ar, order]
+    ord_oh = host_oh[ar, order]                              # (A, C, H)
+
+    xs = (valid_all, core_dem_all, ord_dem, ord_el, ord_oh)
+
+    def app_step(carry, x):
+        free = carry                                         # (H, 2)
+        valid, core_dem, o_dem, o_el, o_oh = x
 
         # ---- core components (lines 11-19): aggregate per-host demand ----
-        core_cpu = _seg_sum(jnp.where(core, p.comp_cpu[a_], 0.0), host, H)
-        core_mem = _seg_sum(jnp.where(core, p.comp_mem[a_], 0.0), host, H)
-        trial_cpu = cpu_free - core_cpu
-        trial_mem = mem_free - core_mem
-        remove = valid & (jnp.any(trial_cpu < 0.0) | jnp.any(trial_mem < 0.0))
+        trial = free - core_dem
+        remove = valid & jnp.any(trial < 0.0)
         commit_core = valid & ~remove
-        cpu_free = jnp.where(commit_core, trial_cpu, cpu_free)
-        mem_free = jnp.where(commit_core, trial_mem, mem_free)
+        free = jnp.where(commit_core, trial, free)
 
         # ---- elastic components (lines 25-33): sequential oldest-first ----
-        def comp_step(inner, c_pos):
-            cf, mf, kill_row = inner
-            c = elastic_order[a_, c_pos]
-            is_el = commit_core & exists[c] & ~p.comp_core[a_, c]
-            h = host[c]
-            tc = cf[h] - p.comp_cpu[a_, c]
-            tm = mf[h] - p.comp_mem[a_, c]
-            kill_c = is_el & ((tc <= 0.0) | (tm <= 0.0))
+        def comp_step(f, x2):
+            dem, el_c, oh = x2                   # (2,), (), (H,)
+            is_el = commit_core & el_c
+            tcm = jnp.where(oh[:, None], f, 0.0).sum(0) - dem    # (2,)
+            kill_c = is_el & jnp.any(tcm <= 0.0)
             commit = is_el & ~kill_c
-            cf = cf.at[h].add(jnp.where(commit, -p.comp_cpu[a_, c], 0.0))
-            mf = mf.at[h].add(jnp.where(commit, -p.comp_mem[a_, c], 0.0))
-            kill_row = kill_row.at[c].set(kill_c)
-            return (cf, mf, kill_row), None
+            f = f - jnp.where((oh & commit)[:, None], dem, 0.0)
+            return f, kill_c
 
-        (cpu_free, mem_free, kill_row), _ = jax.lax.scan(
-            comp_step, (cpu_free, mem_free, jnp.zeros((C,), bool)),
-            jnp.arange(C))
+        # fully unrolled: C is small and the body is a handful of scalar
+        # ops — loop-carry overhead would dominate the work (the scan
+        # engine runs this every tick inside a fused chunk)
+        free, kill_pos = jax.lax.scan(
+            comp_step, free, (o_dem, o_el, o_oh), unroll=True)
 
-        out = (a_, remove, kill_row)
-        return (cpu_free, mem_free), out
+        return free, (remove, kill_pos)
 
-    (cpu_free, mem_free), (idxs, removes, kill_rows) = jax.lax.scan(
-        app_step, (p.host_cpu, p.host_mem), p.app_order)
+    free0 = jnp.stack([p.host_cpu, p.host_mem], -1)
+    free, (removes, kill_pos) = jax.lax.scan(
+        app_step, free0, xs, unroll=8)
+    cpu_free, mem_free = free[:, 0], free[:, 1]
 
-    # scatter scan outputs (ordered by app_order) back to app-index order
-    kill_app = jnp.zeros((A,), bool).at[idxs].max(removes)
-    kill_comp = jnp.zeros((A, C), bool).at[idxs].max(kill_rows)
+    # scatter scan outputs back: kill positions -> component order, then
+    # processing order -> app-index order
+    kill_rows = jnp.zeros((A, C), bool).at[ar, order].set(kill_pos)
+    kill_app = jnp.zeros((A,), bool).at[a_all].max(removes)
+    kill_comp = jnp.zeros((A, C), bool).at[a_all].max(kill_rows)
 
     survive = (p.comp_exists & p.app_exists[:, None]
                & ~kill_app[:, None] & ~kill_comp)
@@ -133,3 +150,7 @@ def pessimistic_shape(p: ShapeProblem) -> ShapeDecision:
     return ShapeDecision(kill_app=kill_app, kill_comp=kill_comp,
                          alloc_cpu=alloc_cpu, alloc_mem=alloc_mem,
                          cpu_free=cpu_free, mem_free=mem_free)
+
+
+#: jitted entry point (one dispatch per call — the host-loop engines)
+pessimistic_shape = jax.jit(pessimistic_shape_raw)

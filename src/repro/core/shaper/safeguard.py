@@ -47,9 +47,8 @@ def beta(request: Array, var: Array, cfg: SafeguardConfig) -> Array:
     return cfg.k1 * request + cfg.k2 * sigma_from_var(var)
 
 
-@partial(jax.jit, static_argnames="cfg")
-def shaped_demand(pred_peak: Array, request: Array, var: Array,
-                  cfg: SafeguardConfig) -> Array:
+def shaped_demand_raw(pred_peak: Array, request: Array, var: Array,
+                      cfg: SafeguardConfig) -> Array:
     """Allocation target: forecast peak + beta, clamped into (0, request].
 
     The clamp to the reservation is the paper's implicit contract: the
@@ -61,9 +60,8 @@ def shaped_demand(pred_peak: Array, request: Array, var: Array,
     return jnp.clip(pred_peak + b, 0.0, request)
 
 
-@jax.jit
-def shaped_demand_scaled(pred_peak: Array, request: Array, var: Array,
-                         k1: Array, scale: Array) -> Array:
+def shaped_demand_scaled_raw(pred_peak: Array, request: Array, var: Array,
+                             k1: Array, scale: Array) -> Array:
     """Eq. 9 with a per-element sigma multiplier (conformal safeguard).
 
     ``scale`` is the calibrated upper-quantile multiplier ``q_hat`` for
@@ -74,3 +72,9 @@ def shaped_demand_scaled(pred_peak: Array, request: Array, var: Array,
     """
     b = k1 * request + scale * sigma_from_var(var)
     return jnp.clip(pred_peak + b, 0.0, request)
+
+
+#: jitted entry points (one dispatch per call — the host-loop engines);
+#: the raw bodies above fuse into the scan engine's per-tick program
+shaped_demand = partial(jax.jit, static_argnames="cfg")(shaped_demand_raw)
+shaped_demand_scaled = jax.jit(shaped_demand_scaled_raw)

@@ -18,8 +18,12 @@ modulates allocations; this package makes that uncertainty trustworthy:
 from repro.core.uncertainty.adaptive import QuantileController
 from repro.core.uncertainty.conformal import (CalibrationConfig,
                                               ConformalForecaster,
-                                              ScoreBuffer, conformal_scale)
-from repro.core.uncertainty.online import OnlineCalibrator
+                                              ScoreBuffer, conformal_scale,
+                                              conformal_scale_ring)
+from repro.core.uncertainty.online import (CalibState, OnlineCalibrator,
+                                           calib_begin, calib_init,
+                                           calib_observe, calib_report,
+                                           calib_scales)
 from repro.core.uncertainty.scoring import (bucket_pow2, crps_empirical,
                                             crps_gaussian,
                                             empirical_coverage,
@@ -31,6 +35,8 @@ __all__ = [
     "sigma_from_var", "sigma_from_var_np", "bucket_pow2",
     "gaussian_quantile_scale", "empirical_coverage",
     "pinball_loss", "crps_gaussian", "crps_empirical",
-    "CalibrationConfig", "conformal_scale", "ScoreBuffer",
-    "ConformalForecaster", "QuantileController", "OnlineCalibrator",
+    "CalibrationConfig", "conformal_scale", "conformal_scale_ring",
+    "ScoreBuffer", "ConformalForecaster", "QuantileController",
+    "OnlineCalibrator", "CalibState", "calib_init", "calib_observe",
+    "calib_begin", "calib_scales", "calib_report",
 ]

@@ -38,8 +38,8 @@ from repro.core.uncertainty.scoring import (bucket_pow2,
 
 Array = jax.Array
 
-__all__ = ["CalibrationConfig", "conformal_scale", "ScoreBuffer",
-           "ConformalForecaster"]
+__all__ = ["CalibrationConfig", "conformal_scale", "conformal_scale_ring",
+           "ScoreBuffer", "ConformalForecaster"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +94,33 @@ def conformal_scale(scores: Array, counts: Array, q: Array,
     live = pos >= (cap - n)[:, None]
     masked = jnp.where(live, scores, jnp.inf)
     srt = jnp.sort(masked, axis=1)                            # live first
+    q = jnp.broadcast_to(jnp.asarray(q, jnp.float32), (B,))
+    k = jnp.ceil((n + 1.0) * q).astype(jnp.int32) - 1
+    k = jnp.clip(k, 0, jnp.maximum(n - 1, 0))
+    val = jnp.take_along_axis(srt, k[:, None], axis=1)[:, 0]
+    fallback = jnp.broadcast_to(jnp.asarray(fallback, jnp.float32), (B,))
+    return jnp.where(n > 0, val, fallback)
+
+
+def conformal_scale_ring(scores: Array, counts: Array, q: Array,
+                         fallback: Array) -> Array:
+    """:func:`conformal_scale` for *circular* rings (scan-engine layout).
+
+    The device-resident calibrator (:mod:`repro.core.uncertainty.online`,
+    ``CalibState``) writes scores at ``count % capacity`` instead of
+    rolling, and pre-fills unwritten cells with ``+inf`` — so the live
+    window is position-independent and no mask is needed: the sort sends
+    unwritten cells past every live score, and the order statistic is
+    taken over ``n = min(count, capacity)`` exactly as in
+    :func:`conformal_scale`.  The live window holds the same multiset of
+    scores as a rolled :class:`ScoreBuffer`, hence identical quantiles.
+
+    Unjitted on purpose: this fuses into the scan engine's per-tick
+    program (jit at the call site for standalone use).
+    """
+    B, cap = scores.shape
+    n = jnp.minimum(counts, cap)
+    srt = jnp.sort(scores, axis=1)
     q = jnp.broadcast_to(jnp.asarray(q, jnp.float32), (B,))
     k = jnp.ceil((n + 1.0) * q).astype(jnp.int32) - 1
     k = jnp.clip(k, 0, jnp.maximum(n - 1, 0))

@@ -27,12 +27,18 @@ quantile evaluation is one padded jitted JAX call per tick via
 """
 from __future__ import annotations
 
+import dataclasses
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.uncertainty.adaptive import QuantileController
-from repro.core.uncertainty.conformal import CalibrationConfig, ScoreBuffer
+from repro.core.uncertainty.conformal import (CalibrationConfig, ScoreBuffer,
+                                              conformal_scale_ring)
 
-__all__ = ["OnlineCalibrator"]
+__all__ = ["OnlineCalibrator", "CalibState", "calib_init", "calib_observe",
+           "calib_begin", "calib_scales", "calib_report"]
 
 
 class OnlineCalibrator:
@@ -170,3 +176,210 @@ class OnlineCalibrator:
             "mean_scale": (round(self._scale_sum / self._scale_n, 4)
                            if self._scale_n else None),
         }
+
+
+# ----------------------------------------------------------------------
+# device-resident calibrator (the scan engine's twin of OnlineCalibrator)
+# ----------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CalibState:
+    """Calibration state as a pytree of device arrays.
+
+    Functional twin of :class:`OnlineCalibrator` for the fused scan
+    engine (:mod:`repro.sim.step`): score rings live on device next to
+    the slot table, and ``calib_observe`` / ``calib_begin`` /
+    ``calib_scales`` fuse into the per-tick program instead of
+    round-tripping through host NumPy.  Rings are *circular* (write at
+    ``count % capacity``, unwritten cells ``+inf``) rather than rolled —
+    the live window holds the same multiset of scores, so
+    :func:`~repro.core.uncertainty.conformal.conformal_scale_ring`
+    returns the same quantiles as the host path.
+
+    Rows follow the engine's forecast-batch layout: CPU rows
+    ``0 .. M-1`` then MEM rows ``M .. 2M-1`` (``M`` = monitor slots).
+    """
+
+    ring: jax.Array        # (S, capacity) f32, unwritten cells +inf
+    ring_count: jax.Array  # (S,) i32 total scores ever pushed per series
+    pool: jax.Array        # (pool_capacity,) f32 fleet-pooled ring
+    pool_count: jax.Array  # () i32
+    # one outstanding prediction per series (horizon-stride sampling)
+    mean: jax.Array        # (S,) f32
+    sigma: jax.Array       # (S,) f32
+    scale: jax.Array       # (S,) f32 deployed sigma-multiplier
+    peak: jax.Array        # (S,) f32 running max of realized usage
+    left: jax.Array        # (S,) i32 ticks to resolution; 0 = idle
+    due: jax.Array         # (S,) i32 expected monitor count at resolution
+    # adaptive controller set-point + telemetry counters
+    q: jax.Array           # () f32
+    resolved: jax.Array    # () i32
+    errors: jax.Array      # () i32
+    dropped: jax.Array     # () i32 invalidated by a series reset
+    scale_sum: jax.Array   # () f32
+    scale_n: jax.Array     # () i32
+
+
+def calib_init(n_series: int, cfg: CalibrationConfig,
+               batch: int | None = None) -> CalibState:
+    """Fresh device calibration state for ``n_series`` rows.
+
+    ``batch`` prepends a seed-cohort axis (see ``state.init_state``)."""
+    B = () if batch is None else (batch,)
+    z = lambda dt: jnp.zeros(B + (n_series,), dt)  # noqa: E731
+    s = lambda dt: jnp.zeros(B, dt)                # noqa: E731
+    q0 = float(np.clip(cfg.q, cfg.q_min, cfg.q_max)
+               if cfg.adaptive else cfg.q)
+    return CalibState(
+        ring=jnp.full(B + (n_series, cfg.capacity), jnp.inf, jnp.float32),
+        ring_count=z(jnp.int32),
+        pool=jnp.full(B + (cfg.pool_capacity,), jnp.inf, jnp.float32),
+        pool_count=s(jnp.int32),
+        mean=z(jnp.float32), sigma=z(jnp.float32), scale=z(jnp.float32),
+        peak=z(jnp.float32), left=z(jnp.int32), due=z(jnp.int32),
+        q=jnp.full(B, q0, jnp.float32),
+        resolved=s(jnp.int32), errors=s(jnp.int32), dropped=s(jnp.int32),
+        scale_sum=s(jnp.float32), scale_n=s(jnp.int32))
+
+
+def calib_observe(st: CalibState, usage: jax.Array, mon_count: jax.Array,
+                  cfg: CalibrationConfig,
+                  active: jax.Array | bool = True) -> CalibState:
+    """Advance outstanding predictions with this tick's usage (pure).
+
+    ``usage``: (S,) realized utilization (CPU rows then MEM rows);
+    ``mon_count``: (S,) per-ROW monitor sample counts (already tiled).
+    Mirrors :meth:`OnlineCalibrator.observe`: a resolution only scores
+    when the series aged exactly ``horizon`` samples since the forecast
+    (a monitor reset makes the count mismatch and the score drops).
+
+    ``active`` gates the whole update: outstanding predictions may
+    outlive the last app, so the scan engine's post-completion padding
+    ticks must not age them (chunk invariance).
+    """
+    S, cap = st.ring.shape
+    act = (st.left > 0) & active
+    peak = jnp.where(act, jnp.maximum(st.peak, usage), st.peak)
+    left = st.left - act.astype(st.left.dtype)
+    fire = act & (left == 0)
+    ok = fire & (mon_count.astype(st.due.dtype) == st.due)
+    dropped = st.dropped + (fire & ~ok).sum().astype(st.dropped.dtype)
+
+    sig = jnp.maximum(st.sigma, 1e-6)
+    s = ((peak - st.mean) / sig).astype(jnp.float32)
+
+    # per-series ring: circular write at count % capacity where resolved
+    rows = jnp.arange(S)
+    pos = st.ring_count % cap
+    cur = st.ring[rows, pos]
+    ring = st.ring.at[rows, pos].set(jnp.where(ok, s, cur))
+    ring_count = st.ring_count + ok.astype(st.ring_count.dtype)
+
+    # fleet pool: scatter this tick's resolved scores in row order (the
+    # host path's push_many order); non-resolved rows write to a dummy
+    # slot past the ring, which is sliced off.  When MORE than
+    # pool_capacity scores resolve in one tick, only the LAST capacity
+    # of them write (exactly ``push_many``'s ``scores[-k:]``) — without
+    # the cut the wrapped positions would collide and XLA scatter makes
+    # no ordering promise for duplicate indices, which would break the
+    # scan engine's bit-identity contracts
+    pool, pool_count = st.pool, st.pool_count
+    if cfg.pool:
+        pcap = st.pool.shape[0]
+        k = jnp.cumsum(ok) - 1
+        n_ok = ok.sum()
+        write = ok & (k >= n_ok - pcap)
+        ppos = jnp.where(write, (st.pool_count + k) % pcap, pcap)
+        padded = jnp.concatenate([st.pool, jnp.full((1,), jnp.inf,
+                                                    jnp.float32)])
+        pool = padded.at[ppos].set(jnp.where(write, s, jnp.inf))[:pcap]
+        pool_count = st.pool_count + n_ok.astype(st.pool_count.dtype)
+
+    err = ok & (peak > st.mean + st.scale * st.sigma)
+    n_ok = ok.sum()
+    resolved = st.resolved + n_ok.astype(st.resolved.dtype)
+    errors = st.errors + err.sum().astype(st.errors.dtype)
+
+    q = st.q
+    if cfg.adaptive:
+        err_rate = err.sum() / jnp.maximum(n_ok, 1).astype(jnp.float32)
+        q_new = jnp.clip(st.q + cfg.gamma * (err_rate - cfg.budget),
+                         cfg.q_min, cfg.q_max)
+        q = jnp.where(n_ok > 0, q_new, st.q)
+
+    return dataclasses.replace(
+        st, ring=ring, ring_count=ring_count, pool=pool,
+        pool_count=pool_count, peak=peak, left=left, q=q,
+        resolved=resolved, errors=errors, dropped=dropped)
+
+
+def calib_begin(st: CalibState, deploy: jax.Array, mean: jax.Array,
+                sigma: jax.Array, scale: jax.Array, mon_count: jax.Array,
+                horizon: int) -> CalibState:
+    """Register deployed predictions where ``deploy`` (pure, all-rows).
+
+    Rows with an outstanding prediction keep it (horizon-stride
+    sampling, exactly :meth:`OnlineCalibrator.begin`); the mean-scale
+    telemetry accumulates over every deployed row like the host path's
+    ``scales()`` accounting.
+    """
+    m = deploy & (st.left == 0)
+    dt = st.left.dtype
+    return dataclasses.replace(
+        st,
+        mean=jnp.where(m, mean, st.mean),
+        sigma=jnp.where(m, sigma, st.sigma),
+        scale=jnp.where(m, scale, st.scale),
+        peak=jnp.where(m, -jnp.inf, st.peak),
+        left=jnp.where(m, jnp.int32(horizon), st.left).astype(dt),
+        due=jnp.where(m, mon_count.astype(dt) + horizon, st.due).astype(dt),
+        scale_sum=st.scale_sum + jnp.where(deploy, scale, 0.0).sum(),
+        scale_n=st.scale_n + deploy.sum().astype(st.scale_n.dtype))
+
+
+def calib_scales(st: CalibState, cfg: CalibrationConfig,
+                 fallback: float) -> jax.Array:
+    """(S,) calibrated sigma-multipliers, series -> pool -> K2 hierarchy."""
+    out = conformal_scale_ring(st.ring, st.ring_count, st.q,
+                               jnp.float32(fallback))
+    young = jnp.minimum(st.ring_count, st.ring.shape[1]) < cfg.min_scores
+    fb = jnp.float32(fallback)
+    if cfg.pool:
+        pool_n = jnp.minimum(st.pool_count, st.pool.shape[0])
+        pool_q = conformal_scale_ring(st.pool[None, :],
+                                      st.pool_count[None], st.q,
+                                      jnp.float32(fallback))[0]
+        fb = jnp.where(pool_n >= cfg.min_scores, pool_q, fb)
+    return jnp.where(young, fb, out)
+
+
+def calib_report(st: CalibState, cfg: CalibrationConfig) -> dict:
+    """Drain a device CalibState into the JSON telemetry block (host).
+
+    Same schema as :meth:`OnlineCalibrator.report`.
+    """
+    ring_count = np.asarray(st.ring_count)
+    live = np.minimum(ring_count, st.ring.shape[1])
+    resolved = int(st.resolved)
+    errors = int(st.errors)
+    scale_n = int(st.scale_n)
+    return {
+        "q_target": round(float(st.q), 4),
+        "q_initial": cfg.q,
+        "adaptive": bool(cfg.adaptive),
+        "budget": cfg.budget,
+        "resolved": resolved,
+        "miscovered": errors,
+        "coverage": (round(1.0 - errors / resolved, 4) if resolved
+                     else None),
+        "dropped": int(st.dropped),
+        "scores_recorded": int(ring_count.sum()),
+        "series_warm": int((live >= cfg.min_scores).sum()),
+        "pool_warm": bool(cfg.pool
+                          and int(np.minimum(np.asarray(st.pool_count),
+                                             st.pool.shape[0]))
+                          >= cfg.min_scores),
+        "mean_scale": (round(float(st.scale_sum) / scale_n, 4)
+                       if scale_n else None),
+    }

@@ -5,7 +5,8 @@ from repro.sim.metrics import SimResults, aggregate_summaries, trace_stats
 from repro.sim.workload import Trace, Workload, WorkloadConfig, generate
 
 __all__ = ["Cluster", "ClusterConfig", "SimConfig", "run_sim",
-           "run_sim_reference", "SimResults", "aggregate_summaries",
+           "run_sim_reference", "run_sim_scan", "run_cohort_scan",
+           "SimResults", "aggregate_summaries",
            "trace_stats",
            "Trace", "Workload", "WorkloadConfig", "generate",
            "build_trace", "make_config", "scenario_names", "scenario_of",
@@ -15,6 +16,8 @@ __all__ = ["Cluster", "ClusterConfig", "SimConfig", "run_sim",
 
 _LAZY = {
     "run_sim_reference": "repro.sim.engine_ref",
+    "run_sim_scan": "repro.sim.step",
+    "run_cohort_scan": "repro.sim.step",
     "build_trace": "repro.sim.scenarios",
     "make_config": "repro.sim.scenarios",
     "scenario_names": "repro.sim.scenarios",

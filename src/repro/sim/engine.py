@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.core.forecast import (ARIMAConfig, ARIMAForecaster, GPConfig,
                                  GPForecaster)
+from repro.core.forecast.base import peak_over_horizon
 from repro.core.monitor import Monitor
 from repro.core.shaper import (POLICIES, SafeguardConfig, ShapeProblem,
                                shaped_demand, shaped_demand_scaled)
@@ -119,11 +120,8 @@ def _jitted_peak_forecast(model, horizon: int, b: int, width: int):
             def fn(w, v):
                 fc = model.forecast_batch(w, horizon, valid=v)
                 # future PEAK utilization (paper §4.2: predictor outputs a
-                # future peak; we take the max of the path + its variance)
-                k = jnp.argmax(fc.mean, axis=1)
-                peak = jnp.take_along_axis(fc.mean, k[:, None], 1)[:, 0]
-                pvar = jnp.take_along_axis(fc.var, k[:, None], 1)[:, 0]
-                return peak, pvar
+                # future peak) — shared reduction with the scan engine
+                return peak_over_horizon(fc)
 
             _JIT_CACHE[key] = fn
     return fn
@@ -319,6 +317,18 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None, *,
     A = cl.A
     mon = Monitor(slots=A * C, window=cfg.window)
     fc = forecast_fn if forecast_fn is not None else _BatchedForecaster(cfg)
+    # per-tick "no request" signal for the sweep's barrier batch mode:
+    # a registered sim that ticks without forecasting (grace period,
+    # empty cluster, baseline policy) tells the batcher so full-cohort
+    # detection is exact and idle ticks stop paying the leader timeout
+    idle_fn = getattr(fc, "idle", None)
+    fc_calls = [0]
+    if idle_fn is not None:
+        inner_fc = fc
+
+        def fc(windows, valid, _inner=inner_fc):
+            fc_calls[0] += 1
+            return _inner(windows, valid)
     policy_fn = POLICIES[cfg.policy]
     res = SimResults(n_apps=N)
     tick = cfg.cluster.tick
@@ -384,6 +394,7 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None, *,
         # (the "application failures" metric of Figs. 3-4)
         preempted_this_tick: list[int] = []
         oom_failed_this_tick: list[int] = []
+        calls_before = fc_calls[0]
         if cfg.policy != "baseline" and run.size:
             kill_app, kill_comp, alloc_cpu, alloc_mem = _shape_decisions(
                 cfg, cl, wl, mon, fc, policy_fn, submit0, run, t, tick,
@@ -416,6 +427,8 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None, *,
             live = cl.comp_running
             cl.alloc[:, :, CPU] = np.where(live, alloc_cpu, 0.0)
             cl.alloc[:, :, MEM] = np.where(live, alloc_mem, 0.0)
+        if idle_fn is not None and fc_calls[0] == calls_before:
+            idle_fn()
 
         # 5. OOM (uncontrolled failures) -----------------------------------
         oom_gids, oom_partial = cl.resolve_oom(wl, usage)

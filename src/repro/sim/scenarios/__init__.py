@@ -17,6 +17,7 @@ from repro.sim.scenarios import families as _families              # noqa: F401
 from repro.sim.scenarios import replay as _replay                  # noqa: F401
 from repro.sim.scenarios.diagnostics import (coverage_report,
                                              forecast_error_report,
+                                             forecast_reports,
                                              sample_usage_series)
 from repro.sim.scenarios.families import (ColocatedConfig, DiurnalConfig,
                                           FlashcrowdConfig, HeavytailConfig)
@@ -33,5 +34,6 @@ __all__ = [
     "make_config", "build_trace",
     "DiurnalConfig", "FlashcrowdConfig", "HeavytailConfig",
     "ColocatedConfig", "ReplayConfig", "load_trace", "save_trace",
-    "coverage_report", "forecast_error_report", "sample_usage_series",
+    "coverage_report", "forecast_error_report", "forecast_reports",
+    "sample_usage_series",
 ]

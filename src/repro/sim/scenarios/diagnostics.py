@@ -22,7 +22,7 @@ import numpy as np
 from repro.sim.scenarios.schema import MEM, Trace
 
 __all__ = ["sample_usage_series", "rolling_errors", "forecast_error_report",
-           "rolling_forecasts", "coverage_report"]
+           "rolling_forecasts", "coverage_report", "forecast_reports"]
 
 # jitted one-step forecast per model config: jax.jit caches by function
 # identity, so a fresh lambda per call would recompile the whole GP/ARIMA
@@ -103,18 +103,12 @@ def rolling_errors(forecaster: str, series: np.ndarray, window: int,
     return rel, z
 
 
-def forecast_error_report(trace: Trace, forecaster: str, *,
-                          window: int = 24, n_series: int = 16,
-                          n_eval: int = 4, seed: int = 0,
-                          gp=None, arima=None) -> dict | None:
-    """One forecast-error record for (trace, forecaster); None for
-    forecasters with nothing to diagnose (oracle is error-free)."""
-    if forecaster == "oracle":
-        return None
-    length = window + max(n_eval, 2) + 8
-    series = sample_usage_series(trace, n_series, length, seed)
-    rel, z = rolling_errors(forecaster, series, window, n_eval,
-                            gp=gp, arima=arima)
+def _error_block(forecaster: str, mean, sd, tgts, *, window: int,
+                 n_series: int, n_eval: int) -> dict:
+    """Error-quartile record from an existing rolling-forecast pass."""
+    scale = np.maximum(np.abs(tgts), 1e-3)
+    rel = (mean - tgts) / scale
+    z = np.abs(mean - tgts) / np.maximum(sd, 1e-9)
     q25, q50, q75 = np.percentile(np.abs(rel), [25, 50, 75])
     return {
         "forecaster": forecaster,
@@ -127,6 +121,22 @@ def forecast_error_report(trace: Trace, forecaster: str, *,
         "abs_rel_err_mean": float(np.abs(rel).mean()),
         "median_abs_z": float(np.median(z)),
     }
+
+
+def forecast_error_report(trace: Trace, forecaster: str, *,
+                          window: int = 24, n_series: int = 16,
+                          n_eval: int = 4, seed: int = 0,
+                          gp=None, arima=None) -> dict | None:
+    """One forecast-error record for (trace, forecaster); None for
+    forecasters with nothing to diagnose (oracle is error-free)."""
+    if forecaster == "oracle":
+        return None
+    length = window + max(n_eval, 2) + 8
+    series = sample_usage_series(trace, n_series, length, seed)
+    mean, sd, tgts = rolling_forecasts(forecaster, series, window, n_eval,
+                                       gp=gp, arima=arima)
+    return _error_block(forecaster, mean, sd, tgts, window=window,
+                        n_series=n_series, n_eval=n_eval)
 
 
 def coverage_report(trace: Trace, forecaster: str, *,
@@ -159,6 +169,20 @@ def coverage_report(trace: Trace, forecaster: str, *,
     """
     if forecaster == "oracle":
         return None
+    n_eval = max(n_eval, 4)
+    n_series = max(n_series, 4)
+    length = window + n_eval + 8
+    series = sample_usage_series(trace, n_series, length, seed)
+    mean, sd, tgts = rolling_forecasts(forecaster, series, window, n_eval,
+                                       gp=gp, arima=arima)
+    return _coverage_block(forecaster, mean, sd, tgts, window=window,
+                           n_series=n_series, n_eval=n_eval,
+                           q_levels=q_levels)
+
+
+def _coverage_block(forecaster: str, mean, sd, tgts, *, window: int,
+                    n_series: int, n_eval: int, q_levels: tuple) -> dict:
+    """Gaussian-vs-conformal band scoring from an existing pass."""
     import jax.numpy as jnp
 
     from repro.core.uncertainty import (ScoreBuffer, crps_gaussian,
@@ -166,12 +190,6 @@ def coverage_report(trace: Trace, forecaster: str, *,
                                         gaussian_quantile_scale,
                                         pinball_loss)
 
-    n_eval = max(n_eval, 4)
-    n_series = max(n_series, 4)
-    length = window + n_eval + 8
-    series = sample_usage_series(trace, n_series, length, seed)
-    mean, sd, tgts = rolling_forecasts(forecaster, series, window, n_eval,
-                                       gp=gp, arima=arima)
     # rows are grouped by start, series-major within each block: row
     # (start_i, series_j) sits at  start_i * n_series + series_j
     cal_mask = np.tile(np.arange(n_series) < n_series // 2, n_eval)
@@ -215,3 +233,41 @@ def coverage_report(trace: Trace, forecaster: str, *,
         "k2_coverage": round(k2_cov, 5),
         "levels": levels,
     }
+
+
+def forecast_reports(trace: Trace, forecaster: str, *,
+                     window: int = 24, n_series: int = 16,
+                     n_eval: int | None = None, seed: int = 0,
+                     coverage: bool = True,
+                     q_levels: tuple = (0.8, 0.9, 0.95),
+                     gp=None, arima=None) -> tuple[dict | None, dict | None]:
+    """(forecast-error report, coverage report) from ONE shared pass.
+
+    The sweep needs both diagnostics per (scenario, forecaster) pair;
+    run separately they each sample series and roll forecasts — the
+    expensive part — over the same trace.  This runs a single
+    ``rolling_forecasts`` pass at the coverage report's (larger)
+    evaluation length and derives both records from it.  ``coverage=
+    False`` skips the conformal block AND drops back to the error
+    report's shorter evaluation length, so grids that sweep no
+    calibration pay nothing for it.  Returns ``(None, None)`` for the
+    oracle.
+    """
+    if forecaster == "oracle":
+        return None, None
+    if n_eval is None:
+        n_eval = 8 if coverage else 4    # each report's standalone default
+    n_eval = max(n_eval, 4) if coverage else n_eval
+    n_series = max(n_series, 4) if coverage else n_series
+    length = window + (n_eval if coverage else max(n_eval, 2)) + 8
+    series = sample_usage_series(trace, n_series, length, seed)
+    mean, sd, tgts = rolling_forecasts(forecaster, series, window, n_eval,
+                                       gp=gp, arima=arima)
+    err = _error_block(forecaster, mean, sd, tgts, window=window,
+                       n_series=n_series, n_eval=n_eval)
+    cov = None
+    if coverage:
+        cov = _coverage_block(forecaster, mean, sd, tgts, window=window,
+                              n_series=n_series, n_eval=n_eval,
+                              q_levels=q_levels)
+    return err, cov

@@ -54,8 +54,7 @@ from repro.sim.engine import (SimConfig, _BatchedForecaster, _make_model,
                               forecast_peaks, run_sim)
 from repro.sim.metrics import aggregate_summaries, trace_stats
 from repro.sim.scenarios import build_trace, make_config, scenario_of
-from repro.sim.scenarios.diagnostics import (coverage_report,
-                                             forecast_error_report)
+from repro.sim.scenarios.diagnostics import forecast_reports
 from repro.sim.workload import WorkloadConfig
 
 __all__ = ["SweepCell", "SweepResult", "ForecastBatcher", "expand_grid",
@@ -206,6 +205,18 @@ class ForecastBatcher:
       ticking in lockstep) batch whole rounds instead of whatever
       arrived within 2 ms.  The generous timeout is a liveness
       safety-net for cells still inside their grace period.
+
+    Sims that tick WITHOUT requesting a forecast (grace period, empty
+    cluster, baseline policy) signal it via :meth:`_tick_idle` (the
+    engine calls ``client.idle()`` once per such tick): the leader
+    counts DISTINCT idle sims toward the cohort, so full-cohort
+    detection is exact and idle ticks stop costing the barrier timeout.
+    Distinct-per-round counting matters: a non-requesting sim (e.g. a
+    baseline-policy cell sharing a gp cohort key) ticks much faster
+    than the forecasting sims, and counting its every tick would let
+    idle credit accumulate until leaders fire solo batches.  The signal
+    is advisory — an over-count merely fires a smaller batch early, and
+    results are row-independent either way.
     """
 
     def __init__(self, wait_s: float = 0.002, mode: str = "leader",
@@ -218,6 +229,7 @@ class ForecastBatcher:
         self._cond = threading.Condition()
         self._pending: dict = {}    # key -> list[_Request] (current round)
         self._clients: dict = {}    # key -> registered sim count
+        self._idle: dict = {}       # key -> ids of sims idle this round
         self.batches = 0            # rounds fired (introspection)
         self.requests = 0           # requests served
 
@@ -241,6 +253,12 @@ class ForecastBatcher:
             self._clients[key] -= 1
             self._cond.notify_all()   # a waiting leader may now be complete
 
+    def _tick_idle(self, key, client_id):
+        """One registered sim ticked without a forecast request."""
+        with self._cond:
+            self._idle.setdefault(key, set()).add(client_id)
+            self._cond.notify_all()   # the leader's cohort may be complete
+
     def _forecast(self, key, model, horizon, windows, valid):
         req = _Request(windows, valid)
         with self._cond:
@@ -249,12 +267,14 @@ class ForecastBatcher:
             leader = len(batch) == 1
             if leader:
                 deadline = time.monotonic() + self._wait_s
-                while len(batch) < self._clients.get(key, 1):
+                while (len(batch) + len(self._idle.get(key, ()))
+                       < self._clients.get(key, 1)):
                     remaining = deadline - time.monotonic()
                     if remaining <= 0:
                         break
                     self._cond.wait(remaining)
                 self._pending[key] = []     # next arrival starts a new round
+                self._idle[key] = set()
             else:
                 self._cond.notify_all()
         if not leader:
@@ -300,6 +320,10 @@ class _BatcherClient:
     def __call__(self, windows: np.ndarray, valid: np.ndarray):
         return self._batcher._forecast(self._key, self._model,
                                        self._horizon, windows, valid)
+
+    def idle(self):
+        """Engine signal: this sim's current tick needs no forecast."""
+        self._batcher._tick_idle(self._key, id(self))
 
     def close(self):
         self._batcher._unregister(self._key)
@@ -385,6 +409,7 @@ def run_grid(base: SimConfig,
              batch_forecasts: bool = True,
              batch_mode: str = "leader",
              barrier_timeout_s: float = 0.25,
+             chunk: int = 32,
              out_path: str | None = None,
              expect_completed: bool = False,
              forecast_diag: bool = True) -> SweepResult:
@@ -394,6 +419,16 @@ def run_grid(base: SimConfig,
     the forecast batcher needs concurrency to stack windows); each cell
     is deterministic per seed regardless of scheduling, because forecast
     rows are computed independently.
+
+    ``engine="scan"`` selects the device-resident scan engine
+    (``repro.sim.step``): no thread pool and no forecast batcher —
+    every cell runs as fused tick chunks on device, and each combo's
+    whole SEED COHORT executes as one vmapped device program (the
+    thread-pooled cross-sim batcher exists to amortize exactly the
+    per-tick dispatch that the scan engine eliminates, so
+    cohort-homogeneous grids retire it wholesale).  Per-seed results
+    are bit-identical to solo ``run_sim_scan`` runs; ``chunk`` sets the
+    ticks executed per device call.
 
     ``forecast_diag`` attaches one rolling forecast-error record per
     (scenario, forecaster) pair in the grid — computed on series sampled
@@ -419,11 +454,13 @@ def run_grid(base: SimConfig,
     elif engine == "reference":
         from repro.sim.engine_ref import run_sim_reference
         run_fn = run_sim_reference
+    elif engine == "scan":
+        run_fn = None                      # cohort path below
     else:
         raise ValueError(f"unknown engine {engine!r}")
     batcher = (ForecastBatcher(mode=batch_mode,
                                barrier_timeout_s=barrier_timeout_s)
-               if batch_forecasts else None)
+               if batch_forecasts and engine != "scan" else None)
 
     # one trace per unique scenario config: many cells share a
     # (config, seed) point and the engines never mutate a Trace, so
@@ -431,6 +468,16 @@ def run_grid(base: SimConfig,
     # read-only across threads
     workloads = {cfg: build_trace(cfg)
                  for cfg in {cell.cfg.workload for cell in grid}}
+
+    def _record(cell: SweepCell, res, wall_s: float) -> dict:
+        s = res.summary()
+        if expect_completed and s["completed"] != s["n_apps"]:
+            raise RuntimeError(
+                f"cell {cell.name} seed {cell.seed}: only {s['completed']}"
+                f"/{s['n_apps']} apps completed (raise max_ticks?)")
+        return dict(name=cell.name, overrides=cell.overrides,
+                    scenario=cell.scenario, seed=cell.seed, summary=s,
+                    wall_s=round(wall_s, 2))
 
     def one(cell: SweepCell) -> dict:
         t0 = time.time()
@@ -441,22 +488,49 @@ def run_grid(base: SimConfig,
         finally:
             if client is not None and hasattr(client, "close"):
                 client.close()
-        s = res.summary()
-        if expect_completed and s["completed"] != s["n_apps"]:
-            raise RuntimeError(
-                f"cell {cell.name} seed {cell.seed}: only {s['completed']}"
-                f"/{s['n_apps']} apps completed (raise max_ticks?)")
-        return dict(name=cell.name, overrides=cell.overrides,
-                    scenario=cell.scenario, seed=cell.seed, summary=s,
-                    wall_s=round(time.time() - t0, 2))
+        return _record(cell, res, time.time() - t0)
+
+    def scan_records() -> list[dict]:
+        """Scan-engine driver: one vmapped device program per combo's
+        seed cohort (serial over combos — the device is the parallel
+        axis, not a thread pool)."""
+        from repro.sim.step import run_cohort_scan, run_sim_scan
+        by_combo: dict[str, list[SweepCell]] = {}
+        for cell in grid:
+            by_combo.setdefault(cell.name, []).append(cell)
+        recs: dict[int, dict] = {}
+        for cells_g in by_combo.values():
+            base_cfg = cells_g[0].cfg
+            seeds_g = [c.seed for c in cells_g]
+            # a cohort needs identical configs modulo the workload seed
+            strip = lambda c: _set_path(c, "workload.seed", 0)  # noqa: E731
+            homogeneous = (len(cells_g) > 1
+                           and len(set(seeds_g)) == len(seeds_g)
+                           and all(strip(c.cfg) == strip(base_cfg)
+                                   for c in cells_g))
+            t0 = time.time()
+            if homogeneous:
+                results = run_cohort_scan(
+                    base_cfg, seeds_g, chunk=chunk,
+                    wls=[workloads[c.cfg.workload] for c in cells_g])
+            else:
+                results = [run_sim_scan(c.cfg, workloads[c.cfg.workload],
+                                        chunk=chunk) for c in cells_g]
+            wall = (time.time() - t0) / len(cells_g)
+            for cell, res in zip(cells_g, results):
+                recs[id(cell)] = _record(cell, res, wall)
+        return [recs[id(cell)] for cell in grid]
 
     t0 = time.time()
-    n_workers = workers or min(len(grid), os.cpu_count() or 4)
-    if n_workers > 1:
-        with ThreadPoolExecutor(max_workers=n_workers) as pool:
-            records = list(pool.map(one, grid))
+    if engine == "scan":
+        records = scan_records()
     else:
-        records = [one(c) for c in grid]
+        n_workers = workers or min(len(grid), os.cpu_count() or 4)
+        if n_workers > 1:
+            with ThreadPoolExecutor(max_workers=n_workers) as pool:
+                records = list(pool.map(one, grid))
+        else:
+            records = [one(c) for c in grid]
 
     # per-scenario trace statistics + forecast-error diagnostics (one
     # record per (scenario, forecaster-model) pair seen in the grid);
@@ -479,15 +553,16 @@ def run_grid(base: SimConfig,
         if key in seen_diag:
             continue
         seen_diag.add(key)
-        rep = forecast_error_report(tr, c.forecaster, window=c.window,
+        # ONE shared rolling-forecast pass feeds both reports (the
+        # sampling + forecasting dominates; previously each report ran
+        # its own pass per (scenario, forecaster) pair)
+        rep, cov = forecast_reports(tr, c.forecaster, window=c.window,
+                                    coverage=sweeps_cal,
                                     gp=c.gp, arima=c.arima)
         if rep is not None:
             diag.append({"scenario": cell.scenario, **rep})
-        if sweeps_cal:
-            cov = coverage_report(tr, c.forecaster, window=c.window,
-                                  gp=c.gp, arima=c.arima)
-            if cov is not None:
-                cal_diag.append({"scenario": cell.scenario, **cov})
+        if cov is not None:
+            cal_diag.append({"scenario": cell.scenario, **cov})
 
     result = SweepResult(
         cells=records, aggregates=_aggregate(records),
@@ -550,8 +625,14 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
     ap.add_argument("--hosts", type=int, default=4)
     ap.add_argument("--components", type=int, default=8)
     ap.add_argument("--workers", type=int, default=None)
-    ap.add_argument("--engine", choices=("vectorized", "reference"),
-                    default="vectorized")
+    ap.add_argument("--engine",
+                    choices=("vectorized", "reference", "scan"),
+                    default="vectorized",
+                    help="vectorized = host loop; reference = frozen "
+                         "seed loop; scan = device-resident fused tick "
+                         "chunks with vmapped seed cohorts")
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="scan engine: ticks per device call")
     ap.add_argument("--no-batch", action="store_true",
                     help="disable cross-sim forecast batching")
     ap.add_argument("--batch-mode", choices=("leader", "barrier"),
@@ -585,7 +666,7 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
     result = run_grid(base, axes, seeds=range(args.seeds),
                       workers=args.workers, engine=args.engine,
                       batch_forecasts=not args.no_batch,
-                      batch_mode=args.batch_mode,
+                      batch_mode=args.batch_mode, chunk=args.chunk,
                       forecast_diag=not args.no_diag, out_path=args.out)
 
     print(f"# {len(result.cells)} cells in {result.wall_s:.1f}s "

@@ -1,0 +1,232 @@
+"""Scan-engine correctness anchors (repro.sim.state / repro.sim.step).
+
+The device-resident engine's contracts, in order of strength:
+
+  * CHUNK INVARIANCE — results are bit-identical for any tick chunking
+    (everything that affects dynamics lives inside the fused step);
+  * COHORT EQUIVALENCE — a vmapped seed cohort reproduces each seed's
+    solo run bit for bit;
+  * HOST AGREEMENT — on the quick-grid configs the scan engine's
+    turnaround table and headline counters equal the host engine's
+    (the engines share every decision rule; only float accumulation
+    order and the FIFO tie-break on exactly equal submit times differ,
+    neither of which these workloads excite);
+  * the frozen ``engine_ref`` anchor for the HOST engine lives in
+    ``tests/test_sweep.py`` and is unaffected by any of this.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.uncertainty import CalibrationConfig
+from repro.sim import (ClusterConfig, SimConfig, WorkloadConfig, generate,
+                       run_sim)
+from repro.sim.step import run_cohort_scan, run_sim_scan
+
+WL = WorkloadConfig(n_apps=24, max_components=6, max_runtime=1200.0,
+                    mean_burst_gap=4.0, mean_long_gap=60.0, seed=7)
+CL = ClusterConfig(n_hosts=3, max_running_apps=16)
+BASE = SimConfig(cluster=CL, workload=WL, max_ticks=3000)
+
+
+def _results_equal(a, b) -> bool:
+    return (a.summary() == b.summary()
+            and a.turnaround == b.turnaround
+            and a.failed_apps == b.failed_apps
+            and a.slack_cpu == b.slack_cpu and a.slack_mem == b.slack_mem
+            and a.util_cpu == b.util_cpu and a.util_mem == b.util_mem
+            and a.n_running == b.n_running)
+
+
+# ----------------------------------------------------------------------
+# chunk invariance: chunk=1 == chunk=32, bit for bit
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,forecaster", [
+    ("baseline", "persist"),
+    ("pessimistic", "persist"),
+    ("pessimistic", "oracle"),
+    ("optimistic", "oracle"),
+])
+def test_chunk_invariance(policy, forecaster):
+    cfg = dataclasses.replace(BASE, policy=policy, forecaster=forecaster)
+    wl = generate(cfg.workload)
+    r1 = run_sim_scan(cfg, wl, chunk=1)
+    r32 = run_sim_scan(cfg, wl, chunk=32)
+    assert _results_equal(r1, r32)
+
+
+def test_chunk_invariance_with_calibration():
+    cfg = dataclasses.replace(
+        BASE, policy="pessimistic", forecaster="persist",
+        calibration=CalibrationConfig(enabled=True, adaptive=True))
+    wl = generate(cfg.workload)
+    r1 = run_sim_scan(cfg, wl, chunk=1)
+    r32 = run_sim_scan(cfg, wl, chunk=32)
+    assert _results_equal(r1, r32)
+    assert r1.calibration == r32.calibration
+
+
+def test_chunk_invariance_checkpoint_mode():
+    cfg = dataclasses.replace(BASE, policy="pessimistic",
+                              forecaster="oracle", work_lost_on_kill=False)
+    wl = generate(cfg.workload)
+    assert _results_equal(run_sim_scan(cfg, wl, chunk=1),
+                          run_sim_scan(cfg, wl, chunk=32))
+
+
+# ----------------------------------------------------------------------
+# vmapped cohort == solo runs, bit for bit, per seed
+# ----------------------------------------------------------------------
+
+def test_cohort_matches_solo_runs():
+    cfg = dataclasses.replace(BASE, policy="pessimistic",
+                              forecaster="persist")
+    seeds = [0, 1, 2, 3]
+    cohort = run_cohort_scan(cfg, seeds, chunk=16)
+    assert len(cohort) == len(seeds)
+    for seed, res in zip(seeds, cohort):
+        solo_cfg = dataclasses.replace(
+            cfg, workload=dataclasses.replace(cfg.workload, seed=seed))
+        solo = run_sim_scan(solo_cfg, chunk=16)
+        assert _results_equal(solo, res), f"seed {seed} diverged"
+
+
+def test_cohort_rejects_mismatched_shapes():
+    cfg = dataclasses.replace(BASE, policy="baseline", forecaster="persist")
+    wls = [generate(dataclasses.replace(cfg.workload, seed=0)),
+           generate(dataclasses.replace(cfg.workload, seed=1,
+                                        n_apps=WL.n_apps + 1))]
+    with pytest.raises(ValueError, match="shape"):
+        run_cohort_scan(cfg, [0, 1], wls=wls)
+
+
+# ----------------------------------------------------------------------
+# scan engine vs host engine
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,forecaster", [
+    ("baseline", "persist"),
+    ("pessimistic", "persist"),
+    ("pessimistic", "oracle"),
+    ("optimistic", "oracle"),
+])
+def test_scan_agrees_with_host_engine(policy, forecaster):
+    cfg = dataclasses.replace(BASE, policy=policy, forecaster=forecaster)
+    wl = generate(cfg.workload)
+    scan = run_sim_scan(cfg, wl, chunk=32)
+    host = run_sim(cfg, wl)
+    assert scan.turnaround == host.turnaround
+    s, h = scan.summary(), host.summary()
+    for k in ("completed", "failed_frac", "failure_events", "oom_kills",
+              "full_preemptions", "partial_preemptions", "sim_hours"):
+        assert s[k] == h[k], (k, s[k], h[k])
+    # telemetry ratios differ only in reduction order
+    np.testing.assert_allclose(scan.util_mem, host.util_mem, rtol=1e-5)
+    np.testing.assert_allclose(scan.slack_mem, host.slack_mem, rtol=1e-5)
+
+
+def test_scan_agrees_with_host_engine_calibrated():
+    cfg = dataclasses.replace(
+        BASE, policy="pessimistic", forecaster="persist",
+        calibration=CalibrationConfig(enabled=True))
+    wl = generate(cfg.workload)
+    scan = run_sim_scan(cfg, wl, chunk=8)
+    host = run_sim(cfg, wl)
+    assert scan.turnaround == host.turnaround
+    for k in ("resolved", "miscovered", "dropped", "coverage",
+              "scores_recorded"):
+        assert scan.calibration[k] == host.calibration[k], k
+
+
+def test_scan_max_ticks_truncation_matches_host():
+    """The tick budget must cut the scan at EXACTLY max_ticks even when
+    the chunk size does not divide it."""
+    cfg = dataclasses.replace(BASE, policy="pessimistic",
+                              forecaster="persist", max_ticks=10)
+    wl = generate(cfg.workload)
+    scan = run_sim_scan(cfg, wl, chunk=32)
+    host = run_sim(cfg, wl)
+    assert scan.sim_time == host.sim_time
+    assert len(scan.util_cpu) == len(host.util_cpu) == 10
+    assert scan.turnaround == host.turnaround
+
+
+# ----------------------------------------------------------------------
+# sweep integration: engine="scan" cohort fast path
+# ----------------------------------------------------------------------
+
+def test_sweep_scan_engine_matches_solo_scan_runs():
+    from repro.sim.sweep import quick_base_config, run_grid
+    base = quick_base_config(n_apps=24, n_hosts=3, seed=0)
+    res = run_grid(base, axes={"policy": ["baseline", "pessimistic"],
+                               "forecaster": ["persist"]},
+                   seeds=[0, 1], engine="scan")
+    assert len(res.cells) == 4
+    assert res.forecast_batches == 0        # batcher retired
+    for cell in res.cells:
+        cfg = base
+        for k, v in cell["overrides"].items():
+            cfg = dataclasses.replace(cfg, **{k: v})
+        cfg = dataclasses.replace(
+            cfg, workload=dataclasses.replace(cfg.workload,
+                                              seed=cell["seed"]))
+        assert run_sim_scan(cfg).summary() == cell["summary"]
+
+
+def test_sweep_scan_engine_heterogeneous_cells():
+    """Cells that share a combo name but are not seed-homogeneous fall
+    back to solo scan runs (still correct, just unbatched)."""
+    from repro.sim.sweep import quick_base_config, run_grid
+    base = quick_base_config(n_apps=16, n_hosts=2, seed=0)
+    res = run_grid(base, axes={"policy": ["pessimistic"],
+                               "forecaster": ["persist"]},
+                   seeds=[3], engine="scan")
+    assert len(res.cells) == 1
+    cfg = dataclasses.replace(
+        base, policy="pessimistic", forecaster="persist",
+        workload=dataclasses.replace(base.workload, seed=3))
+    assert run_sim_scan(cfg).summary() == res.cells[0]["summary"]
+
+
+# ----------------------------------------------------------------------
+# barrier batch mode: idle ticks no longer pay the leader timeout
+# ----------------------------------------------------------------------
+
+def test_barrier_idle_signal_completes_cohort(monkeypatch):
+    """A leader whose cohort peers tick WITHOUT requesting must return
+    as soon as their idle signals arrive — not after the barrier
+    timeout."""
+    import threading
+    import time
+
+    from repro.sim import sweep as SW
+
+    # stub the forecast: this test times the BARRIER, not the model
+    monkeypatch.setattr(
+        SW, "forecast_peaks",
+        lambda model, horizon, w, v: (w[:, -1], w.var(axis=1) + 1e-6))
+    batcher = SW.ForecastBatcher(mode="barrier", barrier_timeout_s=30.0)
+    cfg = dataclasses.replace(SW.quick_base_config(), forecaster="gp")
+    requester = batcher.client(cfg)
+    idler = batcher.client(cfg)
+    wins = np.zeros((2, cfg.window), np.float32)
+    val = np.ones((2, cfg.window), bool)
+    out = {}
+
+    def lead():
+        out["result"] = requester(wins, val)
+
+    t = threading.Thread(target=lead)
+    t0 = time.monotonic()
+    t.start()
+    time.sleep(0.05)
+    idler.idle()                      # the second sim's tick needs nothing
+    t.join(timeout=10.0)
+    elapsed = time.monotonic() - t0
+    assert not t.is_alive(), "leader never returned"
+    assert elapsed < 5.0, f"leader waited the barrier timeout ({elapsed})"
+    assert out["result"][0].shape == (2,)
+    requester.close()
+    idler.close()

@@ -292,6 +292,41 @@ def test_replay_unknown_preset_rejected():
         load_trace(AZURE_FIXTURE, preset="borg")
 
 
+ALIBABA_FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                               "alibaba_tiny.csv")
+
+
+def test_replay_alibaba_preset_maps_container_readings():
+    """The alibaba preset turns container_usage-style readings into one
+    rigid single-component app per container: cpu_request is in the
+    trace's 1/100-core units, utilization percents are of the request,
+    and missing memory readings default to a flat 50%."""
+    tr = load_trace(ALIBABA_FIXTURE, preset="alibaba")
+    assert tr.n_apps == 3 and tr.max_components == 1
+    # sorted by first reading: c_1 (t=0), c_2 (t=10), c_3 (t=40)
+    np.testing.assert_allclose(tr.submit, [0.0, 10.0, 40.0])
+    # spans + one inferred interval; c_3 has a single reading and falls
+    # back to the 10 s Alibaba cadence
+    np.testing.assert_allclose(tr.runtime, [40.0, 30.0, 10.0])
+    # 400/100 = 4 cores, 100/100 = 1, 200/100 = 2
+    np.testing.assert_allclose(tr.cpu_req.ravel(), [4.0, 1.0, 2.0])
+    np.testing.assert_allclose(tr.mem_req.ravel(), [8.0, 2.0, 4.0])
+    assert tr.is_core.all() and not tr.is_elastic.any()
+    # percent readings -> fractions, endpoints preserved by resampling
+    np.testing.assert_allclose(tr.levels[0, 0, 0, 0], 0.30, atol=1e-6)
+    np.testing.assert_allclose(tr.levels[0, 0, -1, 0], 0.52, atol=1e-6)
+    # c_2 has blank mem_util_percent cells -> flat 50% default
+    np.testing.assert_allclose(tr.levels[1, 0, :, 1], 0.5, atol=1e-6)
+
+
+def test_replay_alibaba_preset_via_scenario_config():
+    cfg = make_config("replay", path=ALIBABA_FIXTURE, preset="alibaba")
+    tr = build_trace(cfg)
+    res = run_sim(SimConfig(workload=cfg, policy="pessimistic",
+                            forecaster="persist", max_ticks=2000))
+    assert res.summary()["completed"] == tr.n_apps
+
+
 # ----------------------------------------------------------------------
 # diagnostics
 # ----------------------------------------------------------------------
