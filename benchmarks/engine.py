@@ -17,6 +17,16 @@ ticks/second.  Timings are best-of-N wall clock after a compile warm-up
 interference run).  Equivalence of the engines' results is asserted
 here too — a throughput win that changes results would be meaningless.
 
+The ``gp`` block measures the ROADMAP's masked-forecast concern on a
+tiny GP cell: the scan engine forecasts the FULL padded monitor batch
+whenever any row is ready (per-row compaction needs dynamic shapes),
+so GP cohorts pay ``rows_batch / rows_ready`` extra model compute on
+forecasting ticks.  Solo scan programs gate the model on ``ready.any()``
+(skipping warm-up/grace and post-completion ticks outright); under a
+cohort vmap that gate lowers to a select, which is exactly the overhead
+reported here (``forecast_rows`` telemetry + host/scan/cohort
+ticks-per-second on the same GP cell).
+
 Usage::
 
     python -m benchmarks.engine [--full] [--out BENCH_engine.json]
@@ -40,6 +50,60 @@ def _best_of(fn, n: int) -> float:
         fn()
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+GP_COHORT_SEEDS = 4
+
+
+def _gp_overhead(reps: int) -> dict:
+    """Masked-forecast overhead on a tiny GP cell (see module doc)."""
+    import dataclasses as dc
+
+    from repro.sim import (ClusterConfig, SimConfig, WorkloadConfig,
+                           generate, run_sim)
+    from repro.sim.step import run_cohort_scan, run_sim_scan
+
+    cfg = SimConfig(
+        cluster=ClusterConfig(n_hosts=2, max_running_apps=8),
+        workload=WorkloadConfig(n_apps=16, max_components=4,
+                                max_runtime=1200.0, mean_burst_gap=4.0,
+                                mean_long_gap=60.0, seed=0),
+        policy="pessimistic", forecaster="gp", max_ticks=4000)
+    wl = generate(cfg.workload)
+    seeds = list(range(GP_COHORT_SEEDS))
+    wls = [generate(dc.replace(cfg.workload, seed=s)) for s in seeds]
+    chunk = 32
+
+    host_res = run_sim(cfg, wl)                      # warm-up + anchor
+    scan_res = run_sim_scan(cfg, wl, chunk=chunk)
+    cohort_res = run_cohort_scan(cfg, seeds, chunk=chunk, wls=wls)
+    assert scan_res.turnaround == host_res.turnaround, \
+        "gp scan diverged from gp host run"
+    n_ticks = len(host_res.util_cpu)
+    cohort_ticks = sum(len(r.util_cpu) for r in cohort_res)
+
+    reps = max(reps // 2, 2)
+    host_s = _best_of(lambda: run_sim(cfg, wl), reps)
+    scan_s = _best_of(lambda: run_sim_scan(cfg, wl, chunk=chunk), reps)
+    cohort_s = _best_of(
+        lambda: run_cohort_scan(cfg, seeds, chunk=chunk, wls=wls), reps)
+
+    rows = scan_res.forecast_rows
+    # the compute a compacting forecaster would need vs what the padded
+    # batch costs across the ticks that actually invoked the model
+    masked = (rows["rows_batch"] * rows["ticks_forecasting"]
+              / max(rows["rows_ready"], 1))
+    return {
+        "config": {"n_apps": cfg.workload.n_apps,
+                   "max_running_apps": cfg.cluster.max_running_apps,
+                   "cohort_seeds": GP_COHORT_SEEDS},
+        "n_ticks": n_ticks,
+        "host_ticks_per_s": round(n_ticks / host_s, 1),
+        "scan_ticks_per_s": round(n_ticks / scan_s, 1),
+        "cohort_ticks_per_s": round(cohort_ticks / cohort_s, 1),
+        "forecast_rows": rows,
+        "masked_row_overhead": round(masked, 2),
+    }
 
 
 def run(quick: bool = True, out: str = "BENCH_engine.json",
@@ -121,6 +185,7 @@ def run(quick: bool = True, out: str = "BENCH_engine.json",
             "cohort_8x": cohort_tps / host_tps >= SPEEDUP_COHORT,
             "results_identical": True,   # asserted above
         },
+        "gp": _gp_overhead(reps),
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=1, sort_keys=True)
@@ -128,6 +193,12 @@ def run(quick: bool = True, out: str = "BENCH_engine.json",
     print(f"scan   {scan_tps:8.0f} ticks/s  ({result['speedup_single']}x)")
     print(f"cohort {cohort_tps:8.0f} ticks/s  ({result['speedup_cohort']}x "
           f"aggregate, {COHORT_SEEDS} seeds)")
+    gp = result["gp"]
+    print(f"gp     host {gp['host_ticks_per_s']:.0f} / scan "
+          f"{gp['scan_ticks_per_s']:.0f} / cohort "
+          f"{gp['cohort_ticks_per_s']:.0f} ticks/s; masked-row overhead "
+          f"{gp['masked_row_overhead']}x on "
+          f"{gp['forecast_rows']['ticks_forecasting']} forecasting ticks")
     print(f"-> {out}")
     return result
 

@@ -11,7 +11,11 @@
   calibration  Gaussian-vs-conformal safeguard study (coverage /
          turnaround / failure trade-offs); writes BENCH_calibration.json
   engine  host-loop vs device-resident scan engine vs vmapped seed
-         cohort throughput; writes BENCH_engine.json
+         cohort throughput (+ GP forecast-row overhead); writes
+         BENCH_engine.json
+  shard  scan cohort vs shard_map device-mesh fleets; writes
+         BENCH_shard.json (run it standalone or first: forced host
+         devices must be configured before jax initializes)
   kernels  Pallas kernel microbenches
   roofline dry-run-derived roofline table (if dryrun_results.json exists)
 
@@ -31,7 +35,7 @@ import time
 import traceback
 
 SECTIONS = ("fig2", "fig3", "fig4", "fig5", "scenarios", "calibration",
-            "engine", "kernels", "roofline")
+            "engine", "shard", "kernels", "roofline")
 
 
 def main() -> None:
@@ -69,6 +73,13 @@ def main() -> None:
             elif sec == "engine":
                 from benchmarks import engine
                 engine.run(quick)
+            elif sec == "shard":
+                # importing benchmarks.shard forces host devices; if jax
+                # is already initialized (an earlier section ran) the
+                # bench still runs but may see a single device and then
+                # skips the throughput criterion
+                from benchmarks import shard
+                shard.run()
             elif sec == "kernels":
                 from benchmarks import kernels
                 kernels.main(quick)

@@ -6,6 +6,7 @@ from repro.sim.workload import Trace, Workload, WorkloadConfig, generate
 
 __all__ = ["Cluster", "ClusterConfig", "SimConfig", "run_sim",
            "run_sim_reference", "run_sim_scan", "run_cohort_scan",
+           "run_fleet_shard", "fleet_mesh",
            "SimResults", "aggregate_summaries",
            "trace_stats",
            "Trace", "Workload", "WorkloadConfig", "generate",
@@ -18,6 +19,8 @@ _LAZY = {
     "run_sim_reference": "repro.sim.engine_ref",
     "run_sim_scan": "repro.sim.step",
     "run_cohort_scan": "repro.sim.step",
+    "run_fleet_shard": "repro.sim.step",
+    "fleet_mesh": "repro.sim.shard",
     "build_trace": "repro.sim.scenarios",
     "make_config": "repro.sim.scenarios",
     "scenario_names": "repro.sim.scenarios",

@@ -70,6 +70,12 @@ class SimResults:
     # when SimConfig.calibration is enabled, so legacy summaries — and
     # the engine/engine_ref equivalence contract — are unchanged)
     calibration: dict | None = None
+    # scan-engine forecast-load telemetry (rows_ready / rows_batch /
+    # ticks_forecasting): the masked-rows overhead of forecasting the
+    # full padded batch each tick.  NOT part of summary() — the host
+    # engines gather ready rows dynamically and never fill it, and the
+    # engine-agreement contracts compare summaries.
+    forecast_rows: dict | None = None
 
     def record_completion(self, gid: int, submit: float, t: float) -> None:
         self.turnaround[int(gid)] = float(t - submit)

@@ -1,0 +1,112 @@
+"""Sharded sweep fleets: grid cells x seed cohorts on a device mesh.
+
+``run_grid(engine="scan")`` retired the per-SEED host loop — each
+combo's seed cohort runs as one vmapped device program — but kept a
+per-COMBO Python loop on the host, and the whole sweep still executes
+on a single device.  This module retires that last host-side
+orchestration for homogeneous grids: sweep cells that share every
+config knob except their WORKLOAD (seed and/or scenario — trace data,
+not compiled structure) are grouped into *fleets*, each fleet's stacked
+cohort axis is padded up to the mesh size and laid across the devices
+with ``shard_map`` (:func:`repro.sim.step.run_fleet_shard`), and the
+whole fleet advances as ONE SPMD program with host sync only at chunk
+boundaries.
+
+There are no collectives — sims never communicate — so the mesh is pure
+capacity: per-cell results are bit-identical to the scan engine
+(``shard(mesh=1) == scan``, and any mesh re-slices the fleet axis
+without changing a member's numerics; enforced by
+``tests/test_shard.py``).  On CPU the mesh is built from forced host
+devices::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.sim.sweep --engine shard --mesh 8
+
+Cells whose static config is unique in the grid (singleton fleets)
+fall back to solo scan runs — a one-member SPMD program would only pay
+mesh-placement overhead for nothing.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.sim.step import FLEET_AXIS, run_fleet_shard, run_sim_scan
+
+__all__ = ["fleet_mesh", "device_count", "group_fleets",
+           "run_shard_records", "FLEET_AXIS"]
+
+
+def device_count() -> int:
+    """Visible device count (CPU: 1 unless forced host devices)."""
+    return jax.device_count()
+
+
+def fleet_mesh(n: int | None = None):
+    """1-D mesh over the first ``n`` (default: all) visible devices."""
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    n = len(devs) if n is None else int(n)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"fleet_mesh({n}): {len(devs)} devices visible "
+                         "(on CPU, set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    return Mesh(np.array(devs[:n]), (FLEET_AXIS,))
+
+
+def _strip_workload(cfg, ref):
+    """``cfg`` with its workload replaced by ``ref``'s — equality of the
+    stripped configs is exactly 'may share one SPMD program'."""
+    import dataclasses
+    return dataclasses.replace(cfg, workload=ref.workload)
+
+
+def group_fleets(cells: Sequence, workloads: dict) -> list[list]:
+    """Group sweep cells into fleets: members agree on every config
+    field except ``workload`` AND on the padded trace shape (a fleet is
+    one compiled program; shapes are static).  Order-stable: fleets
+    appear in first-member grid order, members in grid order."""
+    ref = cells[0].cfg
+    groups: dict = {}
+    for cell in cells:
+        wl = workloads[cell.cfg.workload]
+        key = (_strip_workload(cell.cfg, ref),
+               int(wl.n_apps), int(wl.max_components))
+        groups.setdefault(key, []).append(cell)
+    return list(groups.values())
+
+
+def run_shard_records(grid: Sequence, workloads: dict, record, *,
+                      chunk: int = 32, mesh: int | None = None,
+                      log=None) -> list[dict]:
+    """Shard-engine sweep driver (called by ``run_grid``).
+
+    ``record(cell, results, wall_s)`` builds the per-cell record dict;
+    per-cell wall time is the fleet wall divided by its member count.
+    ``log`` (optional callable) receives one line per fleet.
+    """
+    import time
+    recs: dict[int, dict] = {}
+    fleets = group_fleets(grid, workloads)
+    for fleet in fleets:
+        base_cfg = fleet[0].cfg
+        t0 = time.time()
+        if len(fleet) == 1:
+            # singleton static config: solo scan run (see module doc)
+            results = [run_sim_scan(base_cfg,
+                                    workloads[base_cfg.workload],
+                                    chunk=chunk)]
+        else:
+            results = run_fleet_shard(
+                base_cfg, cfgs=[c.cfg for c in fleet],
+                wls=[workloads[c.cfg.workload] for c in fleet],
+                chunk=chunk, mesh=mesh)
+        wall = (time.time() - t0) / len(fleet)
+        if log is not None:
+            log(f"fleet[{len(fleet)} cells] {fleet[0].name} "
+                f"(+{len(fleet) - 1} more): {wall * len(fleet):.2f}s")
+        for cell, res in zip(fleet, results):
+            recs[id(cell)] = record(cell, res, wall)
+    return [recs[id(cell)] for cell in grid]

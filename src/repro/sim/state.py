@@ -21,7 +21,12 @@ boundaries:
 
 Both dataclasses are registered pytrees, so a whole seed cohort is just
 ``vmap`` over a stacked state (every array gains a leading seed axis and
-one batched device program executes the cohort).
+one batched device program executes the cohort).  The sharded fleet
+executor (``repro.sim.step.run_fleet_shard`` / ``repro.sim.shard``)
+reuses the same stacked layout: the leading cohort axis becomes the
+``shard_map`` mesh axis, padded up to a multiple of the mesh size
+(:func:`round_up` / ``from_traces(..., pad_to=...)``) so every device
+holds an equal slice.
 """
 from __future__ import annotations
 
@@ -37,6 +42,12 @@ from repro.sim.metrics import SimResults
 Array = jax.Array
 
 CPU, MEM = 0, 1
+
+
+def round_up(n: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` that is >= ``n`` (mesh padding:
+    a sharded fleet axis must divide evenly across the mesh devices)."""
+    return -(-n // multiple) * multiple
 
 
 @jax.tree_util.register_dataclass
@@ -70,9 +81,19 @@ class DeviceTrace:
             exists=jnp.asarray(wl.cpu_req > 0, bool))
 
     @classmethod
-    def from_traces(cls, wls) -> "DeviceTrace":
+    def from_traces(cls, wls, pad_to: int | None = None) -> "DeviceTrace":
         """Stacked cohort trace, (S, ...) per field — stacked on the
-        host in one pass (one upload per field, not one per seed)."""
+        host in one pass (one upload per field, not one per seed).
+
+        ``pad_to`` rounds the cohort axis up by repeating the LAST trace
+        (sharded fleets need the axis divisible by the mesh size; the
+        padding rows simulate a real workload whose results the driver
+        simply discards, so no phase needs a validity mask)."""
+        wls = list(wls)
+        if pad_to is not None:
+            if pad_to < len(wls):
+                raise ValueError(f"pad_to={pad_to} < cohort size {len(wls)}")
+            wls = wls + [wls[-1]] * (pad_to - len(wls))
         col = lambda f, dt: jnp.asarray(  # noqa: E731
             np.stack([np.asarray(f(w), dt) for w in wls]))
         return cls(
@@ -176,6 +197,11 @@ class TickMetrics:
     used_mem: Array    # () f32
     alloc_cpu: Array   # () f32 cluster-total committed allocation
     alloc_mem: Array   # () f32
+    # forecast-load telemetry: rows past the grace period this tick (the
+    # rows a compacting forecaster would NEED; the scan engine computes
+    # the full padded batch, so ready/batch is the masked-rows overhead
+    # the ROADMAP asks to measure before GP cohorts run at scale)
+    forecast_rows: Array  # () i32
 
 
 def drain_results(cfg, wl, state: SimState,
@@ -208,6 +234,17 @@ def drain_results(cfg, wl, state: SimState,
     for gid in np.nonzero(done)[0]:
         res.turnaround[int(gid)] = float(finish[gid] - submit0[gid])
     res.failed_apps = {int(g) for g in np.nonzero(np.asarray(state.failed))[0]}
+    # forecast-load telemetry (scan-engine only; see TickMetrics): how
+    # many rows were ready vs the full padded batch the program computes
+    if cfg.policy != "baseline" and cfg.forecaster != "oracle":
+        rows = np.asarray(metrics.forecast_rows)[valid]
+        AC = state.mon_count.shape[-1]
+        res.forecast_rows = {
+            "rows_ready": int(rows.sum()),
+            "rows_batch": 2 * AC,
+            "ticks_forecasting": int((rows > 0).sum()),
+            "ticks": int(valid.sum()),
+        }
     res.failure_events = int(state.failure_events)
     res.oom_kills = int(state.oom_kills)
     res.full_preemptions = int(state.full_preemptions)

@@ -33,6 +33,14 @@ are instead:
 Event-driven inner loops (admission, elastic re-placement, OOM victim
 selection) are ``lax.while_loop`` s whose trip counts equal the number
 of actual events — not O(slots x components) per tick.
+
+Fleet scale: :func:`run_fleet_shard` lays the stacked cohort axis
+across a JAX device mesh with ``shard_map`` (one SPMD program, no
+collectives — sims are independent), adding a third anchor on top of
+the two above: ``shard(mesh=1)`` is bit-identical to the cohort scan,
+and any larger mesh is bit-identical per member to ``mesh=1``.  The
+sweep-level executor that groups grid cells into fleets lives in
+:mod:`repro.sim.shard`.
 """
 from __future__ import annotations
 
@@ -50,11 +58,16 @@ from repro.core.uncertainty.online import (calib_begin, calib_observe,
                                            calib_scales)
 from repro.sim.metrics import SimResults
 from repro.sim.state import (CPU, MEM, DeviceTrace, SimState, TickMetrics,
-                             drain_results, init_state)
+                             drain_results, init_state, round_up)
 
 Array = jax.Array
 
-__all__ = ["fused_tick", "run_sim_scan", "run_cohort_scan"]
+__all__ = ["fused_tick", "run_sim_scan", "run_cohort_scan",
+           "run_fleet_shard", "FLEET_AXIS"]
+
+# mesh axis name for sharded fleets (repro.sim.shard lays grid cells x
+# seed cohorts along this axis)
+FLEET_AXIS = "fleet"
 
 SEGMENTS_AXIS = 2  # levels layout (N, C, SEGMENTS, 2)
 
@@ -199,8 +212,9 @@ def _oracle_peaks(tr: DeviceTrace, st: SimState, horizon: int,
 
 
 def _shaped_demands(cfg, model, tr: DeviceTrace, st: SimState,
-                    tick: float) -> tuple[Array, SimState]:
-    """(A, C, 2) shaped demand table + (possibly) updated calib state.
+                    tick: float) -> tuple[Array, SimState, Array]:
+    """(A, C, 2) shaped demand table, updated calib state, and the
+    number of forecast rows actually past the grace period this tick.
 
     Mirrors ``engine._shape_decisions``'s demand construction: running
     components default to their reservation; components past the grace
@@ -217,10 +231,19 @@ def _shaped_demands(cfg, model, tr: DeviceTrace, st: SimState,
         peaks = _oracle_peaks(tr, st, cfg.horizon, tick)
         shaped = shaped_demand_raw(peaks, req, jnp.zeros_like(peaks),
                                    cfg.safeguard)
-        return jnp.where(run[:, :, None], shaped, demand), st
+        return (jnp.where(run[:, :, None], shaped, demand), st,
+                jnp.int32(0))
 
     # forecast over EVERY monitor row (CPU rows then MEM rows); rows not
-    # past the grace period are masked out of the demand afterwards
+    # past the grace period are masked out of the demand afterwards.
+    # Shapes are static under jit, so per-row compaction is impossible —
+    # but the MODEL call (gp/arima, the expensive path) is gated on any
+    # row being ready at all, which skips the model entirely during
+    # warm-up/grace ticks and after global completion.  The gate only
+    # helps solo (non-vmapped) programs: under a cohort vmap the cond
+    # lowers to a select and both branches execute — that residual
+    # masked-rows overhead is what ``forecast_rows`` telemetry measures
+    # (surfaced as the gp block of BENCH_engine.json).
     W = st.mon_buf.shape[1]
     ready = run.reshape(AC) & (st.mon_count >= cfg.grace)
     wins = jnp.concatenate([st.mon_buf[:, :, CPU], st.mon_buf[:, :, MEM]])
@@ -230,8 +253,17 @@ def _shaped_demands(cfg, model, tr: DeviceTrace, st: SimState,
     if cfg.forecaster == "persist":
         mean, var = persistence_peak(wins, valid)
     else:
-        fc = model.forecast_batch(wins, cfg.horizon, valid=valid)
-        mean, var = peak_over_horizon(fc)
+        def _model(args):
+            w, v = args
+            fc = model.forecast_batch(w, cfg.horizon, valid=v)
+            peak, pvar = peak_over_horizon(fc)
+            return peak.astype(jnp.float32), pvar.astype(jnp.float32)
+
+        def _skip(args):
+            z = jnp.zeros((2 * AC,), jnp.float32)
+            return z, z
+
+        mean, var = jax.lax.cond(ready.any(), _model, _skip, (wins, valid))
 
     req_rows = jnp.concatenate([req[:, :, CPU].reshape(AC),
                                 req[:, :, MEM].reshape(AC)])
@@ -254,7 +286,9 @@ def _shaped_demands(cfg, model, tr: DeviceTrace, st: SimState,
     shaped_tbl = jnp.stack([rows[:AC].reshape(A, C),
                             rows[AC:].reshape(A, C)], axis=-1)
     ready_tbl = ready.reshape(A, C)
-    return jnp.where(ready_tbl[:, :, None], shaped_tbl, demand), st
+    fc_rows = 2 * ready.sum().astype(jnp.int32)
+    return (jnp.where(ready_tbl[:, :, None], shaped_tbl, demand), st,
+            fc_rows)
 
 
 def _shape_problem(cfg, tr: DeviceTrace, st: SimState, demand: Array,
@@ -616,8 +650,9 @@ def fused_tick(cfg, model, tr: DeviceTrace,
     # The engine skips this phase when no slot is occupied; here an
     # empty slot table makes every sub-step a no-op (empty kill masks,
     # all-zero allocations over an all-zero table), so no gate is needed.
+    fc_rows = jnp.int32(0)
     if cfg.policy != "baseline":
-        demand, st = _shaped_demands(cfg, model, tr, st, tick)
+        demand, st, fc_rows = _shaped_demands(cfg, model, tr, st, tick)
         prob = _shape_problem(cfg, tr, st, demand, t, host_cap)
         dec = RAW_POLICIES[cfg.policy](prob)
         st, usage, conflict, resets4 = _apply_decision(
@@ -641,7 +676,8 @@ def fused_tick(cfg, model, tr: DeviceTrace,
         valid=active,
         n_running=(st.slot_gid >= 0).sum().astype(jnp.int32),
         used_cpu=used[CPU], used_mem=used[MEM],
-        alloc_cpu=alloc[CPU], alloc_mem=alloc[MEM])
+        alloc_cpu=alloc[CPU], alloc_mem=alloc[MEM],
+        forecast_rows=fc_rows)
 
     st = dataclasses.replace(st, t=jnp.where(active, t, t_prev))
     return st, metrics
@@ -676,15 +712,21 @@ _TRACE_CACHE: "dict" = {}
 _TRACE_CACHE_MAX = 16
 
 
-def _device_trace(wls, batched: bool) -> DeviceTrace:
-    build = (DeviceTrace.from_traces if batched
-             else lambda ws: DeviceTrace.from_trace(ws[0]))
+def _device_trace(wls, batched: bool, *, pad_to: int | None = None,
+                  place=None, place_key=None) -> DeviceTrace:
+    build = (
+        (lambda ws: DeviceTrace.from_traces(ws, pad_to=pad_to)) if batched
+        else lambda ws: DeviceTrace.from_trace(ws[0]))
+    if place is not None:
+        inner = build
+        build = lambda ws: place(inner(ws))  # noqa: E731
     cfgs = tuple(getattr(w, "cfg", None) for w in wls)
     if any(c is None for c in cfgs):
         return build(wls)
     # the key carries the layout too: a batched single-seed cohort has a
-    # leading seed axis that a solo upload of the same config lacks
-    key = (batched, cfgs)
+    # leading seed axis that a solo upload of the same config lacks, and
+    # a sharded fleet (place_key = mesh devices) a different placement
+    key = (batched, pad_to, place_key, cfgs)
     tr = _TRACE_CACHE.pop(key, None)
     if tr is None:
         tr = build(wls)
@@ -723,23 +765,26 @@ def _concat_metrics(parts: list, axis: int = 0) -> TickMetrics:
     return jax.tree.map(lambda *xs: np.concatenate(xs, axis=axis), *host)
 
 
-def _drive_chunks(cfg, chunk: int, shapes, cohort: bool, tr, st):
+def _drive_chunks(cfg, chunk: int, fn_for_size, tr, st):
     """Run chunks until every sim is done or the tick budget is spent.
 
-    The budget is enforced by slicing the LAST chunk to exactly the
-    remaining ticks (one extra compile at most): the step itself gates
-    only on completion, so a truncated sim must never execute a tick
-    past ``max_ticks``.
+    ``fn_for_size(size)`` returns the compiled chunk step (the scan and
+    shard engines differ only in this factory).  The budget is enforced
+    by slicing the LAST chunk to exactly the remaining ticks (one extra
+    compile at most): the step itself gates only on completion, so a
+    truncated sim must never execute a tick past ``max_ticks``.
     """
     parts = []
     remaining = cfg.max_ticks
     while remaining > 0:
         size = min(chunk, remaining)
-        fn = _chunk_fn(cfg, size, shapes, cohort)
+        fn = fn_for_size(size)
         st, ms = fn(tr, st)
         parts.append(ms)
         remaining -= size
-        if bool(st.done.all()):
+        # np.asarray, not st.done.all(): the fleet state is sharded
+        # across devices and the host-side gather is the cheap form
+        if bool(np.asarray(st.done).all()):
             break
     return st, parts
 
@@ -756,8 +801,10 @@ def run_sim_scan(cfg, wl=None, *, chunk: int = 32) -> SimResults:
     wl = wl if wl is not None else build_trace(cfg.workload)
     tr = _device_trace([wl], batched=False)
     st = init_state(cfg, wl.n_apps, wl.max_components)
-    st, parts = _drive_chunks(cfg, chunk, _shapes_key(wl, cfg), False,
-                              tr, st)
+    shapes = _shapes_key(wl, cfg)
+    st, parts = _drive_chunks(
+        cfg, chunk, lambda size: _chunk_fn(cfg, size, shapes, False),
+        tr, st)
     return drain_results(cfg, wl, st, _concat_metrics(parts))
 
 
@@ -790,14 +837,162 @@ def run_cohort_scan(cfg, seeds, *, chunk: int = 32,
     tr = _device_trace(wls, batched=True)
     st = init_state(cfg, wls[0].n_apps, wls[0].max_components,
                     batch=len(seeds))
-    st, parts = _drive_chunks(cfg, chunk, _shapes_key(wls[0], cfg), True,
-                              tr, st)
+    shapes = _shapes_key(wls[0], cfg)
+    st, parts = _drive_chunks(
+        cfg, chunk, lambda size: _chunk_fn(cfg, size, shapes, True),
+        tr, st)
     metrics = _concat_metrics(parts, axis=1)   # leaves: (S, ticks_total)
     out = []
     for i, (c, w) in enumerate(zip(cfgs, wls)):
         # lazy device slices: drain_results touches only the telemetry
         # fields, so the big buffers (monitor rings, score rings) are
         # never copied back to the host
+        st_i = jax.tree.map(lambda x, i=i: x[i], st)
+        ms_i = jax.tree.map(lambda x, i=i: x[i], metrics)
+        out.append(drain_results(c, w, st_i, ms_i))
+    return out
+
+
+# ----------------------------------------------------------------------
+# sharded fleet driver (shard_map over a device mesh)
+# ----------------------------------------------------------------------
+
+def _resolve_mesh(mesh, fleet_size: int):
+    """Normalize ``mesh`` (None = all local devices, int = first N
+    devices, or a ready-made ``Mesh``) to a 1-D fleet mesh.
+
+    The mesh is capped so every device holds at least TWO fleet rows:
+    a device with zero rows would idle, and jaxlib 0.4.x's CPU
+    partitioner SIGFPEs compiling a ``shard_map`` whose per-device
+    slice of this program is exactly 1 (padding past the crash would
+    cost the same wasted compute the cap avoids)."""
+    from jax.sharding import Mesh
+    if isinstance(mesh, Mesh):
+        return mesh
+    devs = jax.devices()
+    n = len(devs) if mesh is None else int(mesh)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"mesh={mesh!r}: need 1..{len(devs)} devices "
+                         f"({len(devs)} visible; set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N for "
+                         "forced host devices on CPU)")
+    cap = max(1, round_up(fleet_size, 2) // 2)
+    return Mesh(np.array(devs[:min(n, cap)]), (FLEET_AXIS,))
+
+
+def _shard_chunk_fn(cfg, chunk: int, shapes, mesh):
+    """Compiled chunk step for a sharded fleet: the SAME vmapped chunk
+    body as the cohort path, laid across the mesh with ``shard_map`` —
+    each device advances its slice of the fleet independently (no
+    collectives: sims never communicate), so one SPMD program executes
+    the whole fleet with host sync only at chunk boundaries."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.shmap import no_check_kwargs, shard_map
+    key = (_cfg_key(cfg), chunk, shapes, "shard",
+           tuple(d.id for d in mesh.devices.flat))
+    fn = _CHUNK_CACHE.get(key)
+    if fn is None:
+        model = _make_model(cfg)
+
+        def run_chunk(tr, st):
+            def body(s, _):
+                return fused_tick(cfg, model, tr, s)
+            return jax.lax.scan(body, st, None, length=chunk)
+
+        spec = P(FLEET_AXIS)
+        sharded = shard_map(jax.vmap(run_chunk), mesh=mesh,
+                            in_specs=(spec, spec), out_specs=(spec, spec),
+                            **no_check_kwargs())
+        fn = _CHUNK_CACHE[key] = jax.jit(sharded, donate_argnums=(1,))
+    return fn
+
+
+def run_fleet_shard(cfg, seeds=None, *, chunk: int = 32, wls=None,
+                    cfgs=None, mesh=None) -> list[SimResults]:
+    """Run a fleet of sims as ONE SPMD program across a device mesh.
+
+    The fleet axis is ``run_cohort_scan``'s stacked cohort axis, padded
+    up to a multiple of the mesh size and laid across the devices with
+    ``shard_map``: each device ``vmap``s its slice of the fleet through
+    the fused tick chunks, and the host syncs only at chunk boundaries
+    (metrics drain + global termination check).  Members may differ in
+    their WORKLOAD only (seed or scenario — both are trace data, not
+    compiled structure); every other config knob is static in the traced
+    program, which is exactly what ``repro.sim.shard`` groups sweep
+    cells by.
+
+    Fleet members are specified either as ``seeds`` (expanded against
+    ``cfg`` exactly like ``run_cohort_scan``) or as explicit ``cfgs``
+    (fully-resolved configs agreeing with ``cfg`` on everything but
+    ``workload``).  ``mesh`` is ``None`` (all visible devices), a device
+    count, or a ready-made 1-D ``Mesh`` over the ``"fleet"`` axis.
+
+    Correctness anchors (``tests/test_shard.py``): ``mesh=1`` is
+    bit-identical to ``run_cohort_scan``, and any larger mesh is
+    bit-identical per member to ``mesh=1`` (XLA CPU reductions are
+    batch-size invariant, so re-slicing the fleet axis cannot change a
+    member's numerics).  Padding members are real sims whose results
+    are simply never drained.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.sim.scenarios.registry import build_trace
+    if cfgs is None:
+        if seeds is None:
+            raise ValueError("pass seeds or cfgs")
+        cfgs = [dataclasses.replace(
+            cfg, workload=dataclasses.replace(cfg.workload, seed=int(s)))
+            for s in seeds]
+    cfgs = list(cfgs)
+    if not cfgs:
+        return []
+    for i, c in enumerate(cfgs):
+        if dataclasses.replace(c, workload=cfg.workload) != cfg:
+            raise ValueError(
+                f"fleet member {i} differs from the base config beyond "
+                "its workload (policy/forecaster/safeguard/... are "
+                "static in the SPMD program)")
+    if wls is None:
+        wls = [build_trace(c.workload) for c in cfgs]
+    shapes = {(int(w.n_apps), int(w.max_components)) for w in wls}
+    if len(shapes) != 1:
+        raise ValueError(f"fleet traces disagree on shape: {shapes}")
+
+    B = len(cfgs)
+    mesh = _resolve_mesh(mesh, B)
+    m = int(mesh.devices.size)
+    # >= 2 rows per device (see _resolve_mesh); an explicitly passed
+    # Mesh wider than B/2 is honored by padding up to 2 rows per device
+    padded = round_up(B, m) if m == 1 else round_up(max(B, 2 * m), m)
+    sharding = NamedSharding(mesh, P(FLEET_AXIS))
+    tr = _device_trace(wls, batched=True, pad_to=padded,
+                       place=lambda t: jax.device_put(t, sharding),
+                       place_key=tuple(d.id for d in mesh.devices.flat))
+    n_apps, max_comp = wls[0].n_apps, wls[0].max_components
+    # jit the fresh state straight into the sharded layout: a fresh
+    # state is all zeros, so materializing it on the default device and
+    # re-placing it would pay ~25 eager dispatches + transfers per run
+    init_key = ("fleet_init", _cfg_key(cfg), n_apps, max_comp, padded,
+                tuple(d.id for d in mesh.devices.flat))
+    init_fn = _CHUNK_CACHE.get(init_key)
+    if init_fn is None:
+        init_fn = _CHUNK_CACHE[init_key] = jax.jit(
+            lambda: init_state(cfg, n_apps, max_comp, batch=padded),
+            out_shardings=sharding)
+    st = init_fn()
+    shapes_k = _shapes_key(wls[0], cfg)
+    st, parts = _drive_chunks(
+        cfg, chunk,
+        lambda size: _shard_chunk_fn(cfg, size, shapes_k, mesh),
+        tr, st)
+    metrics = _concat_metrics(parts, axis=1)   # leaves: (padded, ticks)
+    # ONE bulk device->host gather, then cheap NumPy slices per member:
+    # slicing the sharded axis on device would pay a cross-device
+    # gather per field per member
+    st = jax.device_get(st)
+    out = []
+    for i, (c, w) in enumerate(zip(cfgs, wls)):
         st_i = jax.tree.map(lambda x, i=i: x[i], st)
         ms_i = jax.tree.map(lambda x, i=i: x[i], metrics)
         out.append(drain_results(c, w, st_i, ms_i))

@@ -348,10 +348,19 @@ class SweepResult:
     # per-(scenario, forecaster) Gaussian-vs-conformal coverage
     # diagnostics (schema 3; attached when the grid sweeps calibration)
     calibration: list = dataclasses.field(default_factory=list)
+    # which engine actually ran the grid (additive schema-3 keys).
+    # mesh_devices is the mesh width OFFERED to fleets — the shard
+    # request clamped to the visible devices (0 = not sharded); each
+    # fleet may still use fewer devices, since the per-fleet mesh is
+    # capped at half its padded member count (see step._resolve_mesh)
+    engine: str = "vectorized"
+    mesh_devices: int = 0
 
     def to_json(self) -> dict:
         return {
             "schema": 3,
+            "engine": self.engine,
+            "mesh_devices": self.mesh_devices,
             "base": self.base,
             "cells": self.cells,
             "aggregates": self.aggregates,
@@ -410,6 +419,7 @@ def run_grid(base: SimConfig,
              batch_mode: str = "leader",
              barrier_timeout_s: float = 0.25,
              chunk: int = 32,
+             mesh: int | None = None,
              out_path: str | None = None,
              expect_completed: bool = False,
              forecast_diag: bool = True) -> SweepResult:
@@ -430,6 +440,14 @@ def run_grid(base: SimConfig,
     are bit-identical to solo ``run_sim_scan`` runs; ``chunk`` sets the
     ticks executed per device call.
 
+    ``engine="shard"`` lays the scan engine's fleets across a device
+    mesh with ``shard_map`` (``repro.sim.shard``): cells agreeing on
+    every config knob except their workload (seeds AND scenarios) run
+    as ONE SPMD program, ``mesh`` devices wide (None = all visible).
+    Per-cell results stay bit-identical to ``engine="scan"``.  With a
+    single visible device (CPU without forced host devices) the call
+    gracefully falls back to ``scan``.
+
     ``forecast_diag`` attaches one rolling forecast-error record per
     (scenario, forecaster) pair in the grid — computed on series sampled
     from the scenario's ground-truth profiles, entirely outside the
@@ -449,18 +467,35 @@ def run_grid(base: SimConfig,
     grid = expand_grid(base, axes, seeds, cells)
     if not grid:
         raise ValueError("empty sweep grid")
+    mesh_devices = 0
+    if engine == "shard":
+        # graceful single-device fallback: a 1-wide mesh buys nothing
+        # over the vmapped cohort path, so don't pay its placement.
+        # An over-asking --mesh is clamped to the visible devices, NOT
+        # an error — the fallback promise covers it
+        from repro.sim.shard import device_count
+        want = device_count() if mesh is None else int(mesh)
+        want = max(1, min(want, device_count()))
+        if want < 2:
+            print("# engine=shard: single device visible — falling back "
+                  "to engine=scan (on CPU set XLA_FLAGS="
+                  "--xla_force_host_platform_device_count=N)")
+            engine = "scan"
+        else:
+            mesh = mesh_devices = want
     if engine == "vectorized":
         run_fn = run_sim
     elif engine == "reference":
         from repro.sim.engine_ref import run_sim_reference
         run_fn = run_sim_reference
-    elif engine == "scan":
-        run_fn = None                      # cohort path below
+    elif engine in ("scan", "shard"):
+        run_fn = None                      # cohort/fleet paths below
     else:
         raise ValueError(f"unknown engine {engine!r}")
     batcher = (ForecastBatcher(mode=batch_mode,
                                barrier_timeout_s=barrier_timeout_s)
-               if batch_forecasts and engine != "scan" else None)
+               if batch_forecasts and engine not in ("scan", "shard")
+               else None)
 
     # one trace per unique scenario config: many cells share a
     # (config, seed) point and the engines never mutate a Trace, so
@@ -522,7 +557,11 @@ def run_grid(base: SimConfig,
         return [recs[id(cell)] for cell in grid]
 
     t0 = time.time()
-    if engine == "scan":
+    if engine == "shard":
+        from repro.sim.shard import run_shard_records
+        records = run_shard_records(grid, workloads, _record,
+                                    chunk=chunk, mesh=mesh)
+    elif engine == "scan":
         records = scan_records()
     else:
         n_workers = workers or min(len(grid), os.cpu_count() or 4)
@@ -569,7 +608,8 @@ def run_grid(base: SimConfig,
         base=dataclasses.asdict(base), wall_s=round(time.time() - t0, 2),
         forecast_batches=batcher.batches if batcher else 0,
         forecast_requests=batcher.requests if batcher else 0,
-        scenarios=scen_stats, forecast_error=diag, calibration=cal_diag)
+        scenarios=scen_stats, forecast_error=diag, calibration=cal_diag,
+        engine=engine, mesh_devices=mesh_devices)
     if out_path:
         result.write(out_path)
     return result
@@ -626,13 +666,20 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
     ap.add_argument("--components", type=int, default=8)
     ap.add_argument("--workers", type=int, default=None)
     ap.add_argument("--engine",
-                    choices=("vectorized", "reference", "scan"),
+                    choices=("vectorized", "reference", "scan", "shard"),
                     default="vectorized",
                     help="vectorized = host loop; reference = frozen "
                          "seed loop; scan = device-resident fused tick "
-                         "chunks with vmapped seed cohorts")
+                         "chunks with vmapped seed cohorts; shard = "
+                         "scan fleets laid across a device mesh with "
+                         "shard_map (falls back to scan on one device)")
     ap.add_argument("--chunk", type=int, default=32,
-                    help="scan engine: ticks per device call")
+                    help="scan/shard engines: ticks per device call")
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="shard engine: mesh width in devices (default "
+                         "all visible; on CPU force several with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N)")
     ap.add_argument("--no-batch", action="store_true",
                     help="disable cross-sim forecast batching")
     ap.add_argument("--batch-mode", choices=("leader", "barrier"),
@@ -667,6 +714,7 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
                       workers=args.workers, engine=args.engine,
                       batch_forecasts=not args.no_batch,
                       batch_mode=args.batch_mode, chunk=args.chunk,
+                      mesh=args.mesh,
                       forecast_diag=not args.no_diag, out_path=args.out)
 
     print(f"# {len(result.cells)} cells in {result.wall_s:.1f}s "

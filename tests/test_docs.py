@@ -1,0 +1,118 @@
+"""Docs cannot rot: executable snippets + markdown link check.
+
+Every fenced ``python`` block in the README and docs/ is
+syntax-checked, and — unless annotated with an HTML comment
+``<!-- docs-smoke: compile-only -->`` just above the fence, or
+containing a literal ``...`` placeholder — EXECUTED, so import paths
+and kwargs in the docs track the code.  ``sh`` blocks are not run, but
+every ``python -m <module>`` they mention must resolve to an importable
+module.  All relative markdown links (including anchors-free file
+targets in tables) must point at files that exist.
+"""
+import importlib.util
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+SNIPPET_FILES = ("README.md", "docs/ARCHITECTURE.md",
+                 "docs/BENCHMARKS.md")
+COMPILE_ONLY = "docs-smoke: compile-only"
+
+
+def _blocks(relpath: str):
+    """[(first_code_line, lang, code, runnable)] for one markdown file."""
+    lines = (ROOT / relpath).read_text().splitlines()
+    out = []
+    i = 0
+    while i < len(lines):
+        m = re.match(r"^```(\w+)\s*$", lines[i])
+        if m:
+            start = i + 1
+            j = start
+            while j < len(lines) and not lines[j].startswith("```"):
+                j += 1
+            code = "\n".join(lines[start:j])
+            prev = [ln for ln in lines[max(0, i - 3):i] if ln.strip()]
+            marked = any(COMPILE_ONLY in ln for ln in prev)
+            runnable = not marked and "..." not in code
+            out.append((start + 1, m.group(1), code, runnable))
+            i = j + 1
+        else:
+            i += 1
+    return out
+
+
+@pytest.mark.parametrize("relpath", SNIPPET_FILES)
+def test_python_blocks_compile(relpath):
+    blocks = [b for b in _blocks(relpath) if b[1] == "python"]
+    if relpath != "docs/BENCHMARKS.md":   # reference doc: sh-only is fine
+        assert blocks, f"{relpath}: no python blocks found"
+    for lineno, _, code, _ in blocks:
+        compile(code, f"{relpath}:{lineno}", "exec")
+
+
+@pytest.mark.parametrize("relpath", SNIPPET_FILES)
+def test_python_blocks_execute(relpath):
+    """Runnable blocks execute top-to-bottom in one shared namespace
+    per file (later snippets may build on earlier imports)."""
+    ns: dict = {"__name__": f"docs_smoke_{Path(relpath).stem}"}
+    ran = 0
+    for lineno, lang, code, runnable in _blocks(relpath):
+        if lang != "python" or not runnable:
+            continue
+        try:
+            exec(compile(code, f"{relpath}:{lineno}", "exec"), ns)
+        except Exception as e:          # pragma: no cover - diagnostic
+            pytest.fail(f"{relpath}:{lineno}: snippet raised {e!r}")
+        ran += 1
+    if relpath != "docs/BENCHMARKS.md":   # reference doc: sh-only is fine
+        assert ran, f"{relpath}: every python block is marked " \
+                    "compile-only — docs would rot silently"
+
+
+def test_sh_blocks_reference_importable_modules():
+    seen = set()
+    for relpath in SNIPPET_FILES:
+        for _, lang, code, _ in _blocks(relpath):
+            if lang != "sh":
+                continue
+            seen |= set(re.findall(r"python3? -m ([\w.]+)", code))
+    assert seen, "no `python -m` references found in sh blocks"
+    for mod in sorted(seen):
+        assert importlib.util.find_spec(mod) is not None, \
+            f"docs reference `python -m {mod}` but it does not resolve"
+
+
+def test_run_grid_kwargs_match_docs():
+    """The engine/mesh kwargs the docs advertise must stay real."""
+    import inspect
+
+    from repro.sim.step import run_fleet_shard
+    from repro.sim.sweep import run_grid
+    grid_params = inspect.signature(run_grid).parameters
+    for kw in ("engine", "mesh", "chunk", "workers", "out_path"):
+        assert kw in grid_params, kw
+    fleet_params = inspect.signature(run_fleet_shard).parameters
+    for kw in ("chunk", "wls", "cfgs", "mesh"):
+        assert kw in fleet_params, kw
+
+
+def _md_files():
+    return sorted(set(ROOT.glob("*.md")) | set((ROOT / "docs").glob("*.md")))
+
+
+def test_markdown_relative_links_resolve():
+    bad = []
+    for md in _md_files():
+        text = md.read_text()
+        # strip fenced code (snippet pseudo-links are not navigation)
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for label, target in re.findall(r"\[([^\]]*)\]\(([^)\s]+)\)", text):
+            if re.match(r"^(https?|mailto):", target) or target.startswith("#"):
+                continue
+            path = (md.parent / target.split("#", 1)[0]).resolve()
+            if not path.exists():
+                bad.append(f"{md.relative_to(ROOT)}: [{label}]({target})")
+    assert not bad, "dangling relative links:\n" + "\n".join(bad)

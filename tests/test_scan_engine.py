@@ -127,6 +127,31 @@ def test_scan_agrees_with_host_engine(policy, forecaster):
     np.testing.assert_allclose(scan.slack_mem, host.slack_mem, rtol=1e-5)
 
 
+def test_scan_agrees_with_host_engine_gp_gated():
+    """The gp/arima model call is gated on any(ready) inside the fused
+    tick (PR-5 forecast gating): the gate must not change results vs
+    the host engine, and the forecast_rows telemetry must report the
+    masked-batch load without leaking into summary()."""
+    cfg = dataclasses.replace(
+        BASE, policy="pessimistic", forecaster="gp",
+        workload=dataclasses.replace(WL, n_apps=12))
+    wl = generate(cfg.workload)
+    scan = run_sim_scan(cfg, wl, chunk=16)
+    host = run_sim(cfg, wl)
+    assert scan.turnaround == host.turnaround
+    s, h = scan.summary(), host.summary()
+    for k in ("completed", "failed_frac", "failure_events", "oom_kills",
+              "full_preemptions", "partial_preemptions", "sim_hours"):
+        assert s[k] == h[k], (k, s[k], h[k])
+    # telemetry ratios differ only in reduction order (module doc)
+    np.testing.assert_allclose(scan.util_mem, host.util_mem, rtol=1e-5)
+    fr = scan.forecast_rows
+    assert fr is not None and host.forecast_rows is None
+    assert fr["rows_batch"] == 2 * CL.max_running_apps * WL.max_components
+    assert 0 < fr["ticks_forecasting"] <= fr["ticks"]
+    assert "forecast_rows" not in scan.summary()
+
+
 def test_scan_agrees_with_host_engine_calibrated():
     cfg = dataclasses.replace(
         BASE, policy="pessimistic", forecaster="persist",
