@@ -1,0 +1,40 @@
+"""Multi-tenant control plane layered over the simulation engines.
+
+The paper shapes resources per *application*; a production cluster
+contends per *tenant* (ROADMAP open item 1).  This package adds the
+control-plane shape that Flex (Le & Liu, 2020) and the two-stage Mesos
+work (Rattihalli et al., 2019) put in front of a shaper:
+
+  * :mod:`repro.control.config`   — ``TenancyConfig`` (the ``SimConfig.
+    control`` field) + SLO-class constants;
+  * :mod:`repro.control.fairness` — weighted dominant-resource shares,
+    Jain's fairness index, the admission gate mask.  Every function
+    works on NumPy *and* JAX arrays (the host engine and the fused
+    tick share one implementation);
+  * :mod:`repro.control.credit`   — the online tenant credit score
+    (EMA of good vs bad outcomes) and the credit->quantile mapping
+    that modulates the conformal safeguard per tenant;
+  * :mod:`repro.control.device`   — ``TenantState``, the tenant-indexed
+    accounting pytree carried through the fused tick (scan/shard);
+  * :mod:`repro.control.host`     — ``HostControl``, the NumPy mirror
+    the vectorized host engine drives tick by tick;
+  * :mod:`repro.control.summary`  — the shared per-tenant results
+    block (fairness / SLO / turnaround / credit) both engine families
+    drain into ``SimResults.tenancy``.
+
+See ``docs/CONTROL_PLANE.md`` for the subsystem reference.
+"""
+from repro.control.config import (SLO_CLASSES, SLO_STRETCH, TenancyConfig,
+                                  resolve_weights)
+from repro.control.credit import credit_quantile, credit_step
+from repro.control.device import TenantState, control_init
+from repro.control.fairness import dominant_shares, gate_mask, jain_index
+from repro.control.host import HostControl
+from repro.control.summary import tenancy_summary
+
+__all__ = [
+    "SLO_CLASSES", "SLO_STRETCH", "TenancyConfig", "resolve_weights",
+    "credit_quantile", "credit_step", "TenantState", "control_init",
+    "dominant_shares", "gate_mask", "jain_index", "HostControl",
+    "tenancy_summary",
+]

@@ -1,0 +1,72 @@
+"""Tenancy configuration + SLO-class constants.
+
+This module is a leaf: it imports nothing from ``repro`` so both the
+trace schema (``repro.sim.scenarios.schema``) and the engines can use
+it without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+#: SLO classes a trace may tag apps with, ordered weakest-first.  The
+#: integer code stored in ``Trace.slo`` indexes this tuple.
+SLO_CLASSES = ("best-effort", "standard", "premium")
+
+#: Turnaround stretch budget per SLO class: an app meets its SLO when
+#: ``turnaround <= stretch * runtime`` (queue wait + shaping slowdown
+#: bounded as a multiple of the ideal runtime).  Premium tenants buy a
+#: tight stretch; best-effort tolerates a long queue.
+SLO_STRETCH = (8.0, 4.0, 2.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class TenancyConfig:
+    """``SimConfig.control`` — the multi-tenant control plane.
+
+    Disabled by default: ``enabled=False`` is bit-identical to the
+    pre-control-plane engines (no tenant state is allocated, no gate
+    runs — the equivalence anchors in ``tests/test_scan_engine.py`` /
+    ``tests/test_shard.py`` hold unchanged).
+    """
+
+    enabled: bool = False
+    #: static tenant-axis width for the device accounting arrays (the
+    #: fused tick needs a fixed shape); traces must satisfy
+    #: ``tenant < max_tenants``.
+    max_tenants: int = 8
+    #: per-tenant wDRF weights, padded with 1.0 up to ``max_tenants``
+    #: (empty = unweighted DRF).  A tenant's accounted share is its
+    #: dominant share divided by its weight.
+    weights: tuple = ()
+    #: admission/throttling gate at enqueue time: a tenant whose wDRF
+    #: share exceeds the active-tenant mean by more than ``slack`` is
+    #: held back this tick (its queued apps stay queued).
+    gate: bool = True
+    slack: float = 0.10
+    #: online credit score: EMA of good (completions, covered conformal
+    #: resolutions) vs bad (failures, conflicts, miscoverage) outcomes.
+    #: Modulates BOTH the gate headroom (``slack * credit``) and the
+    #: per-tenant conformal target quantile (see ``credit_quantile``).
+    credit: bool = True
+    credit_gamma: float = 0.10
+    credit_floor: float = 0.05
+    credit_init: float = 0.5
+    #: half-width of the credit->quantile band: a zero-credit tenant
+    #: targets ``q + q_spread`` (conservative band), a full-credit one
+    #: ``q - q_spread`` (aggressive shaping).
+    q_spread: float = 0.05
+
+
+def resolve_weights(cfg: TenancyConfig) -> np.ndarray:
+    """``(max_tenants,)`` float32 wDRF weights, 1.0-padded."""
+    w = np.ones(cfg.max_tenants, np.float32)
+    given = np.asarray(cfg.weights, np.float32)
+    if given.size > cfg.max_tenants:
+        raise ValueError(f"{given.size} weights for "
+                         f"max_tenants={cfg.max_tenants}")
+    if np.any(given <= 0):
+        raise ValueError("tenant weights must be positive")
+    w[:given.size] = given
+    return w

@@ -1,0 +1,58 @@
+"""Online tenant credit score.
+
+An EMA of each tenant's good-vs-bad outcome ratio: completions and
+covered conformal resolutions raise credit, failures (OOM kills,
+optimistic conflicts) and conformal miscoverage lower it.  The score
+feeds back into the control plane twice:
+
+  * the admission gate's headroom shrinks for low-credit tenants
+    (``slack * credit`` instead of ``slack``);
+  * the conformal safeguard's target quantile widens for low-credit
+    tenants (:func:`credit_quantile`) — risky tenants get conservative
+    bands, reliable ones aggressive shaping.
+
+Like :mod:`repro.control.fairness`, everything is NumPy/JAX agnostic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _xp(*arrays):
+    return jnp if any(isinstance(a, jax.Array) for a in arrays) else np
+
+
+def credit_step(credit, good, bad, gamma, floor):
+    """One EMA update: ``credit += gamma * (good_ratio - credit)``.
+
+    ``good`` / ``bad`` are per-tenant event counts for the tick; a
+    tenant with no events this tick keeps its credit.  The result is
+    clipped to ``[floor, 1]`` — the floor keeps a misbehaving tenant's
+    gate headroom and conformal band finite (it can always earn its
+    way back).
+    """
+    xp = _xp(credit, good, bad)
+    g = good.astype(xp.float32)
+    b = bad.astype(xp.float32)
+    tot = g + b
+    ratio = g / xp.maximum(tot, 1.0)
+    target = xp.where(tot > 0, ratio, credit)
+    new = credit + xp.float32(gamma) * (target - credit)
+    return xp.clip(new, xp.float32(floor), xp.float32(1.0)).astype(xp.float32)
+
+
+def credit_quantile(credit, q, spread, q_min, q_max):
+    """Per-tenant conformal target quantile from the credit score.
+
+    Linear in credit around the configured target: a neutral tenant
+    (credit 0.5) keeps ``q``, a zero-credit tenant targets
+    ``q + spread`` and a full-credit one ``q - spread``; the result is
+    clipped into the calibrator's admissible ``[q_min, q_max]`` band.
+    """
+    xp = _xp(credit, q)
+    # q may be a traced device scalar (st.calib.q inside the fused
+    # tick), so no xp.float32(q) cast — promotion keeps float32 anyway
+    qs = q + xp.float32(spread) * (1.0 - 2.0 * credit)
+    return xp.clip(qs, xp.float32(q_min), xp.float32(q_max)).astype(xp.float32)

@@ -1,0 +1,50 @@
+"""Tenant accounting state for the fused device tick (scan/shard).
+
+``TenantState`` is the control plane's twin of
+``repro.core.uncertainty.online.CalibState``: a frozen pytree of
+device arrays carried through ``lax.scan`` tick chunks, vmapped seed
+cohorts and ``shard_map`` fleets.  The host engine mirrors it with
+:class:`repro.control.host.HostControl`; both drain into the same
+:func:`repro.control.summary.tenancy_summary` block.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.control.config import TenancyConfig, resolve_weights
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TenantState:
+    """Per-tenant accounting arrays, shape ``(T,)`` (``(B, T)`` under a
+    cohort vmap).  ``T = TenancyConfig.max_tenants`` is static."""
+
+    credit: Array         # f32 - online credit score in [floor, 1]
+    admitted: Array       # i32 - apps admitted through the gate
+    throttled: Array      # i32 - queued app-ticks held back by the gate
+    completed: Array      # i32 - apps completed
+    failed: Array         # i32 - failure events (conflicts + OOM kills)
+    share_sum: Array      # f32 - sum of wDRF share over active ticks
+    active_ticks: Array   # i32 - ticks the tenant was running or queued
+
+
+def control_init(cfg: TenancyConfig, batch: int | None = None) -> TenantState:
+    """Fresh tenant state (optionally with a leading cohort axis)."""
+    B = () if batch is None else (batch,)
+    T = cfg.max_tenants
+    zi = lambda: jnp.zeros(B + (T,), jnp.int32)        # noqa: E731
+    return TenantState(
+        credit=jnp.full(B + (T,), cfg.credit_init, jnp.float32),
+        admitted=zi(), throttled=zi(), completed=zi(), failed=zi(),
+        share_sum=jnp.zeros(B + (T,), jnp.float32), active_ticks=zi())
+
+
+def device_weights(cfg: TenancyConfig) -> Array:
+    """The resolved wDRF weights as a device constant."""
+    return jnp.asarray(resolve_weights(cfg))

@@ -1,0 +1,65 @@
+"""Weighted dominant-resource fairness (wDRF) accounting.
+
+Every function here runs on NumPy *and* JAX arrays — the vectorized
+host engine and the fused device tick share one implementation, so the
+two paths cannot drift apart formula-wise (float accumulation order
+may still differ by an ulp; the cross-engine tests compare counters
+exactly and shares with tolerance).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _xp(*arrays):
+    """numpy-or-jax dispatch on the argument types."""
+    return jnp if any(isinstance(a, jax.Array) for a in arrays) else np
+
+
+def dominant_shares(alloc, cap, weights):
+    """Per-tenant weighted dominant share.
+
+    ``alloc`` is ``(T, R)`` allocated resources per tenant, ``cap``
+    the ``(R,)`` cluster capacity, ``weights`` the ``(T,)`` wDRF
+    weights.  A tenant's dominant share is its largest
+    capacity-normalized allocation across resources (DRF [Ghodsi'11]);
+    dividing by the weight makes heavier tenants entitled to more.
+    """
+    xp = _xp(alloc, cap, weights)
+    norm = alloc / xp.maximum(cap, 1e-9)[None, :]
+    return (xp.max(norm, axis=-1) / weights).astype(xp.float32)
+
+
+def jain_index(shares, active=None):
+    """Jain's fairness index over the active tenants' shares.
+
+    ``(sum x)^2 / (n * sum x^2)`` — 1.0 when all active shares are
+    equal, ``1/n`` when one tenant holds everything.  ``active`` masks
+    which tenants count (default: all); with no active tenant or all
+    zero shares the index is defined as 1.0 (nothing to be unfair
+    about).
+    """
+    xp = _xp(shares, active)
+    x = shares if active is None else shares * active
+    n = x.size if active is None else active.sum()
+    num = xp.sum(x) ** 2
+    den = n * xp.sum(x * x)
+    return xp.where(den > 0, num / xp.maximum(den, 1e-30), 1.0)
+
+
+def gate_mask(shares, active, slack):
+    """Admission-gate eligibility per tenant.
+
+    A tenant may admit new work this tick unless its wDRF share
+    exceeds the mean share of the *active* tenants (running or
+    queued) by more than ``slack`` (scalar, or per-tenant — the
+    credit-modulated headroom ``slack * credit``).  Inactive tenants
+    are trivially eligible.
+    """
+    xp = _xp(shares, active)
+    n = active.sum()
+    mean = xp.where(n > 0,
+                    xp.sum(shares * active) / xp.maximum(n, 1), 0.0)
+    return (~active) | (shares <= mean + slack)

@@ -1,0 +1,109 @@
+"""Host-engine mirror of the device tenant state.
+
+``HostControl`` is to :class:`repro.control.device.TenantState` what
+``OnlineCalibrator`` is to ``CalibState``: the same accounting,
+updated imperatively in NumPy by ``repro.sim.engine.run_sim``.  The
+shared formula layer (:mod:`repro.control.fairness`,
+:mod:`repro.control.credit`) keeps the two in lockstep; event counters
+match the device engines exactly, float accumulations to within
+reduction-order ulps.
+
+Per-tick protocol (mirrors ``step._control_tick``):
+
+1. phases 2-5 call :meth:`note_completed` / :meth:`note_failed` /
+   :meth:`note_calib` as events land (good/bad accumulate);
+2. at admission time :meth:`gate` folds the tick's events into the
+   credit EMA, accrues share/active accounting and returns the
+   per-tenant eligibility mask;
+3. the admission loop calls :meth:`note_admitted` per placed app.
+
+Shaping (phase 4) reads :meth:`q_groups` *before* step 2 runs, so the
+safeguard quantile always uses the previous tick's credit — exactly
+like the fused tick, where ``calib_scales`` precedes the control
+update.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.control.config import TenancyConfig, resolve_weights
+from repro.control.credit import credit_quantile, credit_step
+from repro.control.fairness import dominant_shares, gate_mask
+
+
+class HostControl:
+    def __init__(self, cfg: TenancyConfig):
+        T = cfg.max_tenants
+        self.cfg = cfg
+        self.weights = resolve_weights(cfg)
+        self.credit = np.full(T, cfg.credit_init, np.float32)
+        self.admitted = np.zeros(T, np.int64)
+        self.throttled = np.zeros(T, np.int64)
+        self.completed = np.zeros(T, np.int64)
+        self.failed = np.zeros(T, np.int64)
+        self.share_sum = np.zeros(T, np.float32)
+        self.active_ticks = np.zeros(T, np.int64)
+        self._good = np.zeros(T, np.int64)
+        self._bad = np.zeros(T, np.int64)
+
+    # -- per-event notes (phases 2-5) ----------------------------------
+    def note_completed(self, tenants) -> None:
+        np.add.at(self.completed, tenants, 1)
+        np.add.at(self._good, tenants, 1)
+
+    def note_failed(self, tenants) -> None:
+        """A failure event (optimistic conflict or OOM full kill)."""
+        np.add.at(self.failed, tenants, 1)
+        np.add.at(self._bad, tenants, 1)
+
+    def note_calib(self, covered, miscovered) -> None:
+        """Per-tenant conformal resolution counts for this tick."""
+        self._good += np.asarray(covered, np.int64)
+        self._bad += np.asarray(miscovered, np.int64)
+
+    def note_admitted(self, tenant: int) -> None:
+        self.admitted[tenant] += 1
+
+    # -- shaping hook (phase 4, pre-update credit) ---------------------
+    def q_groups(self, q: float, q_min: float, q_max: float) -> np.ndarray:
+        """Per-tenant conformal target quantile from current credit."""
+        if not self.cfg.credit:
+            return np.full(self.cfg.max_tenants, q, np.float32)
+        return credit_quantile(self.credit, q, self.cfg.q_spread,
+                               q_min, q_max)
+
+    # -- admission gate (phase 6 entry) --------------------------------
+    def gate(self, alloc_t: np.ndarray, cap: np.ndarray,
+             queued_t: np.ndarray) -> np.ndarray:
+        """Fold the tick's events into credit, accrue share accounting,
+        return the per-tenant admission-eligibility mask.
+
+        ``alloc_t`` is ``(T, R)`` allocated resources per tenant,
+        ``cap`` the ``(R,)`` cluster capacity, ``queued_t`` the
+        ``(T,)`` queued-app counts."""
+        cfg = self.cfg
+        if cfg.credit:
+            self.credit = credit_step(self.credit, self._good, self._bad,
+                                      cfg.credit_gamma, cfg.credit_floor)
+        self._good[:] = 0
+        self._bad[:] = 0
+        share = dominant_shares(np.asarray(alloc_t, np.float32),
+                                np.asarray(cap, np.float32), self.weights)
+        active = (share > 0) | (queued_t > 0)
+        self.share_sum += np.float32(share * active)
+        self.active_ticks += active
+        if cfg.gate:
+            slack = (np.float32(cfg.slack) * self.credit
+                     if cfg.credit else np.float32(cfg.slack))
+            elig = gate_mask(share, active, slack)
+        else:
+            elig = np.ones(cfg.max_tenants, bool)
+        self.throttled += np.where(elig, 0, queued_t).astype(np.int64)
+        return elig
+
+    # -- drain ---------------------------------------------------------
+    def arrays(self) -> dict:
+        return dict(credit=self.credit, admitted=self.admitted,
+                    throttled=self.throttled, completed=self.completed,
+                    failed=self.failed, share_sum=self.share_sum,
+                    active_ticks=self.active_ticks)

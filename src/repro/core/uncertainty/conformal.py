@@ -64,6 +64,14 @@ class CalibrationConfig:
     # series' own ring warms up.  False = fall straight back to K2.
     pool: bool = True
     pool_capacity: int = 1024
+    # per-GROUP score rings — the series -> group -> fleet-pool tier of
+    # the fallback hierarchy.  Groups are tenants when the control plane
+    # is enabled (``SimConfig.control``): a young series borrows its
+    # tenant's pooled quantile before falling back to the fleet pool,
+    # so coverage holds per tenant even when tenants' residual
+    # distributions differ.  Only allocated when the engine passes
+    # ``n_groups > 0``.
+    group_capacity: int = 256
     adaptive: bool = False  # tune q online against the failure budget
     budget: float = 0.1     # target miscoverage (failure-rate budget)
     gamma: float = 0.05     # ACI step size for the adaptive controller

@@ -38,7 +38,8 @@ from repro.core.uncertainty.conformal import (CalibrationConfig, ScoreBuffer,
                                               conformal_scale_ring)
 
 __all__ = ["OnlineCalibrator", "CalibState", "calib_init", "calib_observe",
-           "calib_begin", "calib_scales", "calib_report"]
+           "calib_begin", "calib_scales", "calib_report",
+           "calib_group_report"]
 
 
 class OnlineCalibrator:
@@ -51,7 +52,7 @@ class OnlineCalibrator:
     """
 
     def __init__(self, n_series: int, horizon: int, fallback: float,
-                 cfg: CalibrationConfig):
+                 cfg: CalibrationConfig, *, n_groups: int = 0):
         self.cfg = cfg
         self.horizon = int(horizon)
         self.fallback = float(fallback)
@@ -60,6 +61,15 @@ class OnlineCalibrator:
         # hierarchy (series ring -> pool -> K2) for young series
         self.pooled = (ScoreBuffer(1, cfg.pool_capacity)
                        if cfg.pool else None)
+        # per-GROUP rings (series -> group -> pool -> K2): groups are
+        # tenants when the control plane is on.  ``n_groups == 0`` (the
+        # default, and every pre-control-plane caller) allocates nothing
+        # and keeps behavior identical.
+        self.groups = (ScoreBuffer(n_groups, cfg.group_capacity)
+                       if n_groups > 0 else None)
+        self._group = np.full((n_series,), -1, np.int64)
+        self.group_resolved = np.zeros(max(n_groups, 0), np.int64)
+        self.group_errors = np.zeros(max(n_groups, 0), np.int64)
         self.controller = QuantileController(cfg) if cfg.adaptive else None
         z = lambda dt: np.zeros((n_series,), dt)  # noqa: E731
         self._mean, self._sigma, self._scale = z(np.float32), z(np.float32), z(np.float32)
@@ -107,19 +117,31 @@ class OnlineCalibrator:
             self.pooled.push_many(0, s.astype(np.float32))
         err = self._peak[rows] > (self._mean[rows]
                                   + self._scale[rows] * self._sigma[rows])
+        if self.groups is not None:
+            g = self._group[rows]
+            valid = g >= 0
+            for gg in np.unique(g[valid]):
+                self.groups.push_many(int(gg),
+                                      s[g == gg].astype(np.float32))
+            np.add.at(self.group_resolved, g[valid], 1)
+            np.add.at(self.group_errors, g[valid], err[valid])
         self.resolved += rows.size
         self.errors += int(err.sum())
         if self.controller is not None:
             self.controller.update(err)
 
     def begin(self, rows: np.ndarray, mean: np.ndarray, sigma: np.ndarray,
-              scale: np.ndarray, mon_count: np.ndarray) -> None:
+              scale: np.ndarray, mon_count: np.ndarray,
+              groups: np.ndarray | None = None) -> None:
         """Register deployed predictions for ``rows`` (batch layout).
 
         Rows with an outstanding prediction keep it — calibration
         samples the forecast stream at horizon stride instead of scoring
         overlapping horizons (which would double-count excursions).
-        ``mon_count``: per-ROW monitor counts (already gathered).
+        ``mon_count``: per-ROW monitor counts (already gathered);
+        ``groups``: per-ROW group (tenant) ids, recorded at deploy time
+        so the resolution credits the tenant that owned the slot when
+        the bound shipped.
         """
         free = self._left[rows] == 0
         r = rows[free]
@@ -131,15 +153,23 @@ class OnlineCalibrator:
         self._peak[r] = -np.inf
         self._left[r] = self.horizon
         self._due[r] = mon_count[free] + self.horizon
+        if self.groups is not None and groups is not None:
+            self._group[r] = groups[free]
 
-    def scales(self, rows: np.ndarray) -> np.ndarray:
+    def scales(self, rows: np.ndarray, groups: np.ndarray | None = None,
+               q: np.ndarray | float | None = None) -> np.ndarray:
         """Calibrated sigma-multipliers for ``rows``.
 
         Hierarchy: the series' own score quantile once ``min_scores``
-        accumulated; else the fleet-wide pooled quantile (if enabled and
-        itself warm); else the uncalibrated K2 fallback.
+        accumulated; else the row's GROUP quantile (when group rings
+        exist, ``groups`` maps rows to them, and that group is warm);
+        else the fleet-wide pooled quantile (if enabled and itself
+        warm); else the uncalibrated K2 fallback.  ``q`` overrides the
+        target level per row (the control plane's credit-modulated
+        quantile); default is the fleet set-point.
         """
-        out = self.scores.scales(rows, self.q, self.fallback)
+        qv = self.q if q is None else q
+        out = self.scores.scales(rows, qv, self.fallback)
         young = self.scores.n(rows) < self.cfg.min_scores
         if young.any():
             fb = self.fallback
@@ -148,7 +178,14 @@ class OnlineCalibrator:
                     >= self.cfg.min_scores):
                 fb = float(self.pooled.scales(np.asarray([0]), self.q,
                                               self.fallback)[0])
-            out[young] = fb
+            fbv = np.full(rows.shape[0], fb, np.float32)
+            if self.groups is not None and groups is not None:
+                gc = np.maximum(groups, 0)
+                warm = ((groups >= 0)
+                        & (self.groups.n(gc) >= self.cfg.min_scores))
+                gq = self.groups.scales(gc, qv, fbv)
+                fbv = np.where(warm, gq, fbv)
+            out[young] = fbv[young]
         self._scale_sum += float(out.sum())
         self._scale_n += rows.size
         return out
@@ -175,6 +212,22 @@ class OnlineCalibrator:
                 >= self.cfg.min_scores),
             "mean_scale": (round(self._scale_sum / self._scale_n, 4)
                            if self._scale_n else None),
+        }
+
+    def group_report(self) -> dict | None:
+        """Per-group (tenant) resolution/coverage block, or None."""
+        if self.groups is None:
+            return None
+        res = self.group_resolved
+        err = self.group_errors
+        live = np.minimum(self.groups.count, self.groups.capacity)
+        cov = [(round(1.0 - e / r, 4) if r else None)
+               for r, e in zip(res.tolist(), err.tolist())]
+        return {
+            "resolved": res.tolist(),
+            "miscovered": err.tolist(),
+            "coverage": cov,
+            "warm": (live >= self.cfg.min_scores).astype(int).tolist(),
         }
 
 
@@ -219,18 +272,36 @@ class CalibState:
     dropped: jax.Array     # () i32 invalidated by a series reset
     scale_sum: jax.Array   # () f32
     scale_n: jax.Array     # () i32
+    # per-GROUP (tenant) tier — ``None`` when the engine runs without
+    # the control plane, so the pytree STRUCTURE (and hence every
+    # compiled program) stays identical to the pre-tenancy layout
+    group_ring: jax.Array | None = None      # (G, group_capacity) f32
+    group_count: jax.Array | None = None     # (G,) i32
+    group: jax.Array | None = None           # (S,) i32 deploy group, -1 idle
+    group_resolved: jax.Array | None = None  # (G,) i32
+    group_errors: jax.Array | None = None    # (G,) i32
 
 
 def calib_init(n_series: int, cfg: CalibrationConfig,
-               batch: int | None = None) -> CalibState:
+               batch: int | None = None, n_groups: int = 0) -> CalibState:
     """Fresh device calibration state for ``n_series`` rows.
 
-    ``batch`` prepends a seed-cohort axis (see ``state.init_state``)."""
+    ``batch`` prepends a seed-cohort axis (see ``state.init_state``);
+    ``n_groups > 0`` allocates the per-group (tenant) score tier."""
     B = () if batch is None else (batch,)
     z = lambda dt: jnp.zeros(B + (n_series,), dt)  # noqa: E731
     s = lambda dt: jnp.zeros(B, dt)                # noqa: E731
     q0 = float(np.clip(cfg.q, cfg.q_min, cfg.q_max)
                if cfg.adaptive else cfg.q)
+    kw = {}
+    if n_groups > 0:
+        kw = dict(
+            group_ring=jnp.full(B + (n_groups, cfg.group_capacity),
+                                jnp.inf, jnp.float32),
+            group_count=jnp.zeros(B + (n_groups,), jnp.int32),
+            group=jnp.full(B + (n_series,), -1, jnp.int32),
+            group_resolved=jnp.zeros(B + (n_groups,), jnp.int32),
+            group_errors=jnp.zeros(B + (n_groups,), jnp.int32))
     return CalibState(
         ring=jnp.full(B + (n_series, cfg.capacity), jnp.inf, jnp.float32),
         ring_count=z(jnp.int32),
@@ -240,7 +311,7 @@ def calib_init(n_series: int, cfg: CalibrationConfig,
         peak=z(jnp.float32), left=z(jnp.int32), due=z(jnp.int32),
         q=jnp.full(B, q0, jnp.float32),
         resolved=s(jnp.int32), errors=s(jnp.int32), dropped=s(jnp.int32),
-        scale_sum=s(jnp.float32), scale_n=s(jnp.int32))
+        scale_sum=s(jnp.float32), scale_n=s(jnp.int32), **kw)
 
 
 def calib_observe(st: CalibState, usage: jax.Array, mon_count: jax.Array,
@@ -301,6 +372,32 @@ def calib_observe(st: CalibState, usage: jax.Array, mon_count: jax.Array,
     resolved = st.resolved + n_ok.astype(st.resolved.dtype)
     errors = st.errors + err.sum().astype(st.errors.dtype)
 
+    # per-group rings: same circular scatter as the pool, but positions
+    # are ranked WITHIN each group (row order, the host path's
+    # per-group push_many order) and offset into a flattened (G, gcap)
+    # table; the per-group keep-last-gcap cut prevents duplicate
+    # scatter indices exactly as above
+    gr, gcnt = st.group_ring, st.group_count
+    g_res, g_err = st.group_resolved, st.group_errors
+    if gr is not None:
+        G, gcap = gr.shape
+        g = st.group
+        gok = ok & (g >= 0)
+        gc = jnp.maximum(g, 0)
+        oh = gok[:, None] & (g[:, None] == jnp.arange(G)[None, :])
+        rank = (jnp.cumsum(oh, axis=0) - oh)[jnp.arange(S), gc]
+        ng = oh.sum(axis=0)
+        write = gok & (rank >= ng[gc] - gcap)
+        pos = (gcnt[gc] + rank) % gcap
+        idx = jnp.where(write, gc * gcap + pos, G * gcap)
+        padded = jnp.concatenate([gr.reshape(-1),
+                                  jnp.full((1,), jnp.inf, jnp.float32)])
+        gr = padded.at[idx].set(
+            jnp.where(write, s, jnp.inf))[:G * gcap].reshape(G, gcap)
+        gcnt = gcnt + ng.astype(gcnt.dtype)
+        g_res = g_res + ng.astype(g_res.dtype)
+        g_err = g_err + (oh & err[:, None]).sum(axis=0).astype(g_err.dtype)
+
     q = st.q
     if cfg.adaptive:
         err_rate = err.sum() / jnp.maximum(n_ok, 1).astype(jnp.float32)
@@ -311,21 +408,29 @@ def calib_observe(st: CalibState, usage: jax.Array, mon_count: jax.Array,
     return dataclasses.replace(
         st, ring=ring, ring_count=ring_count, pool=pool,
         pool_count=pool_count, peak=peak, left=left, q=q,
-        resolved=resolved, errors=errors, dropped=dropped)
+        resolved=resolved, errors=errors, dropped=dropped,
+        group_ring=gr, group_count=gcnt,
+        group_resolved=g_res, group_errors=g_err)
 
 
 def calib_begin(st: CalibState, deploy: jax.Array, mean: jax.Array,
                 sigma: jax.Array, scale: jax.Array, mon_count: jax.Array,
-                horizon: int) -> CalibState:
+                horizon: int,
+                groups: jax.Array | None = None) -> CalibState:
     """Register deployed predictions where ``deploy`` (pure, all-rows).
 
     Rows with an outstanding prediction keep it (horizon-stride
     sampling, exactly :meth:`OnlineCalibrator.begin`); the mean-scale
     telemetry accumulates over every deployed row like the host path's
-    ``scales()`` accounting.
+    ``scales()`` accounting.  ``groups``: per-row group (tenant) ids
+    recorded at deploy time, mirroring ``OnlineCalibrator.begin``.
     """
     m = deploy & (st.left == 0)
     dt = st.left.dtype
+    extra = {}
+    if st.group is not None and groups is not None:
+        extra["group"] = jnp.where(m, groups.astype(st.group.dtype),
+                                   st.group)
     return dataclasses.replace(
         st,
         mean=jnp.where(m, mean, st.mean),
@@ -335,13 +440,25 @@ def calib_begin(st: CalibState, deploy: jax.Array, mean: jax.Array,
         left=jnp.where(m, jnp.int32(horizon), st.left).astype(dt),
         due=jnp.where(m, mon_count.astype(dt) + horizon, st.due).astype(dt),
         scale_sum=st.scale_sum + jnp.where(deploy, scale, 0.0).sum(),
-        scale_n=st.scale_n + deploy.sum().astype(st.scale_n.dtype))
+        scale_n=st.scale_n + deploy.sum().astype(st.scale_n.dtype),
+        **extra)
 
 
 def calib_scales(st: CalibState, cfg: CalibrationConfig,
-                 fallback: float) -> jax.Array:
-    """(S,) calibrated sigma-multipliers, series -> pool -> K2 hierarchy."""
-    out = conformal_scale_ring(st.ring, st.ring_count, st.q,
+                 fallback: float, groups: jax.Array | None = None,
+                 q_rows: jax.Array | None = None,
+                 q_groups: jax.Array | None = None) -> jax.Array:
+    """(S,) calibrated sigma-multipliers.
+
+    Hierarchy: series -> group -> pool -> K2, exactly
+    :meth:`OnlineCalibrator.scales`.  ``groups`` maps rows to group
+    rings (current slot occupant's tenant); ``q_rows`` overrides the
+    per-row target level and ``q_groups`` the per-group one (the
+    control plane's credit-modulated quantiles) — both default to the
+    fleet set-point ``st.q``.
+    """
+    q = st.q if q_rows is None else q_rows
+    out = conformal_scale_ring(st.ring, st.ring_count, q,
                                jnp.float32(fallback))
     young = jnp.minimum(st.ring_count, st.ring.shape[1]) < cfg.min_scores
     fb = jnp.float32(fallback)
@@ -351,7 +468,17 @@ def calib_scales(st: CalibState, cfg: CalibrationConfig,
                                       st.pool_count[None], st.q,
                                       jnp.float32(fallback))[0]
         fb = jnp.where(pool_n >= cfg.min_scores, pool_q, fb)
-    return jnp.where(young, fb, out)
+    fb_rows = jnp.broadcast_to(fb, out.shape)
+    if st.group_ring is not None and groups is not None:
+        gcap = st.group_ring.shape[1]
+        qg = st.q if q_groups is None else q_groups
+        gq = conformal_scale_ring(st.group_ring, st.group_count, qg, fb)
+        gc = jnp.maximum(groups, 0)
+        warm = ((groups >= 0)
+                & (jnp.minimum(st.group_count, gcap)[gc]
+                   >= cfg.min_scores))
+        fb_rows = jnp.where(warm, gq[gc], fb_rows)
+    return jnp.where(young, fb_rows, out)
 
 
 def calib_report(st: CalibState, cfg: CalibrationConfig) -> dict:
@@ -382,4 +509,22 @@ def calib_report(st: CalibState, cfg: CalibrationConfig) -> dict:
                           >= cfg.min_scores),
         "mean_scale": (round(float(st.scale_sum) / scale_n, 4)
                        if scale_n else None),
+    }
+
+
+def calib_group_report(st: CalibState, cfg: CalibrationConfig) -> dict | None:
+    """Per-group (tenant) block; same schema as
+    :meth:`OnlineCalibrator.group_report`."""
+    if st.group_ring is None:
+        return None
+    res = np.asarray(st.group_resolved)
+    err = np.asarray(st.group_errors)
+    live = np.minimum(np.asarray(st.group_count), st.group_ring.shape[1])
+    cov = [(round(1.0 - e / r, 4) if r else None)
+           for r, e in zip(res.tolist(), err.tolist())]
+    return {
+        "resolved": res.tolist(),
+        "miscovered": err.tolist(),
+        "coverage": cov,
+        "warm": (live >= cfg.min_scores).astype(int).tolist(),
     }

@@ -60,6 +60,7 @@ from repro.core.shaper import (POLICIES, SafeguardConfig, ShapeProblem,
                                shaped_demand, shaped_demand_scaled)
 from repro.core.uncertainty import (CalibrationConfig, OnlineCalibrator,
                                     bucket_pow2, sigma_from_var_np)
+from repro.control import HostControl, TenancyConfig, tenancy_summary
 from repro.sim.cluster import CPU, MEM, Cluster, ClusterConfig
 from repro.sim.metrics import SimResults
 from repro.sim.scenarios.registry import build_trace
@@ -77,6 +78,11 @@ class SimConfig:
     # default — the legacy K2-sigma path stays bit-identical to
     # engine_ref; see repro.core.uncertainty)
     calibration: CalibrationConfig = CalibrationConfig()
+    # multi-tenant control plane: admission gate (wDRF), credit-aware
+    # shaping, per-tenant conformal pools (disabled by default — the
+    # tenancy-off path is bit-identical to the pre-control-plane
+    # engines; see repro.control)
+    control: TenancyConfig = TenancyConfig()
     window: int = 24                     # monitor window (ticks)
     grace: int = 10                      # grace period (paper §5: 10 min)
     horizon: int = 3                     # forecast look-ahead (ticks)
@@ -219,7 +225,7 @@ def _shaped_demand_scaled_padded(peak: np.ndarray, req: np.ndarray,
 
 def _shape_decisions(cfg: SimConfig, cl: Cluster, wl: Workload, mon: Monitor,
                      fc, policy_fn, submit0: np.ndarray, run: np.ndarray,
-                     t: float, tick: float, calib=None):
+                     t: float, tick: float, calib=None, ctl=None):
     """Forecast -> safeguard -> Algorithm 1 for one tick (shared by the
     vectorized and reference engines).  Returns numpy
     (kill_app, kill_comp, alloc_cpu, alloc_mem)."""
@@ -260,7 +266,18 @@ def _shape_decisions(cfg: SimConfig, cl: Cluster, wl: Workload, mon: Monitor,
                 # replaces K2 (rows follow the batch layout: CPU then MEM)
                 M = mon.count.shape[0]
                 rows = np.concatenate([mslots[sel], M + mslots[sel]])
-                scale = calib.scales(rows)
+                groups, q_rows = None, None
+                if ctl is not None:
+                    # per-tenant pools + credit-modulated target level:
+                    # rows map to the tenant owning the slot; q_groups
+                    # reads the PREVIOUS tick's credit (the control
+                    # update runs later, at admission time)
+                    tg = wl.tenant[cl.slot_gid[run[rc[0][sel]]]]
+                    groups = np.concatenate([tg, tg])
+                    qg = ctl.q_groups(calib.q, cfg.calibration.q_min,
+                                      cfg.calibration.q_max)
+                    q_rows = qg[groups]
+                scale = calib.scales(rows, groups=groups, q=q_rows)
                 for r, off in ((CPU, 0), (MEM, n)):
                     sh = _shaped_demand_scaled_padded(
                         mean[off:off + n], reqs[:, r], var[off:off + n],
@@ -269,7 +286,8 @@ def _shape_decisions(cfg: SimConfig, cl: Cluster, wl: Workload, mon: Monitor,
                 sigma = sigma_from_var_np(var).astype(np.float32)
                 counts = np.concatenate([mon.count[mslots[sel]]] * 2)
                 calib.begin(rows, mean.astype(np.float32), sigma,
-                            scale.astype(np.float32), counts)
+                            scale.astype(np.float32), counts,
+                            groups=groups)
 
     # build the fixed-size ShapeProblem over ALL slots
     dem_full = np.zeros((A, C, 2), np.float32)
@@ -333,13 +351,25 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None, *,
     res = SimResults(n_apps=N)
     tick = cfg.cluster.tick
     all_comps = np.arange(C)[None, :]     # broadcast helper for mon resets
+    # multi-tenant control plane (admission gate + credit accounting)
+    hc = None
+    if cfg.control.enabled:
+        if wl.n_tenants > cfg.control.max_tenants:
+            raise ValueError(
+                f"trace has {wl.n_tenants} tenants > control.max_tenants="
+                f"{cfg.control.max_tenants}")
+        hc = HostControl(cfg.control)
     # online conformal calibration (oracle forecasts are exact — there
-    # is no residual distribution to calibrate)
+    # is no residual distribution to calibrate); with the control plane
+    # on, scores additionally pool per tenant (the series -> group ->
+    # fleet tier)
     calib = None
     if cfg.calibration.enabled and cfg.forecaster != "oracle":
         calib = OnlineCalibrator(n_series=2 * A * C, horizon=cfg.horizon,
                                  fallback=cfg.safeguard.k2,
-                                 cfg=cfg.calibration)
+                                 cfg=cfg.calibration,
+                                 n_groups=(cfg.control.max_tenants
+                                           if hc is not None else 0))
 
     queue: list[tuple[float, int]] = []   # (original submit, gid) sorted
     arrived = 0
@@ -375,6 +405,8 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None, *,
             done[fin_gids] = True
             for gid in fin_gids:
                 res.record_completion(int(gid), submit0[gid], t)
+            if hc is not None:
+                hc.note_completed(wl.tenant[fin_gids])
 
         # 3. monitor sampling --------------------------------------------
         usage = cl.usage_now(wl)
@@ -384,9 +416,17 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None, *,
             mslots = run[rc[0]] * C + rc[1]
             mon.record(mslots, usage[run][rc][:, CPU], usage[run][rc][:, MEM])
         if calib is not None:
+            if hc is not None:
+                gr0 = calib.group_resolved.copy()
+                ge0 = calib.group_errors.copy()
             calib.observe(np.concatenate([usage[:, :, CPU].ravel(),
                                           usage[:, :, MEM].ravel()]),
                           mon.count)
+            if hc is not None:
+                # covered / miscovered conformal resolutions feed the
+                # tenant credit score alongside completions / failures
+                derr = calib.group_errors - ge0
+                hc.note_calib(calib.group_resolved - gr0 - derr, derr)
 
         # 4. shaping ------------------------------------------------------
         # two distinct kill channels (paper §4.2): controlled preemptions
@@ -398,7 +438,7 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None, *,
         if cfg.policy != "baseline" and run.size:
             kill_app, kill_comp, alloc_cpu, alloc_mem = _shape_decisions(
                 cfg, cl, wl, mon, fc, policy_fn, submit0, run, t, tick,
-                calib=calib)
+                calib=calib, ctl=hc)
 
             kills = np.nonzero(kill_app & (cl.slot_gid >= 0))[0]
             if kills.size:
@@ -442,16 +482,44 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None, *,
 
         for gid in oom_failed_this_tick:
             res.record_failure(gid)
+        if hc is not None and oom_failed_this_tick:
+            hc.note_failed(wl.tenant[np.asarray(oom_failed_this_tick)])
         for gid in oom_failed_this_tick + preempted_this_tick:
             requeue(gid)
 
         # 6. scheduler: FIFO admission + elastic re-placement --------------
+        # with the control plane on, the tick's events first fold into
+        # the tenant credit, then the wDRF gate decides which tenants
+        # may admit this tick (ineligible tenants' apps stay queued)
+        elig = None
+        if hc is not None:
+            T = cfg.control.max_tenants
+            alloc_t = np.zeros((T, 2), np.float32)
+            run6 = cl.running_slots()
+            if run6.size:
+                np.add.at(alloc_t, wl.tenant[cl.slot_gid[run6]],
+                          cl.alloc[run6].sum(1))
+            queued_t = np.bincount(wl.tenant[[g for _, g in queue]],
+                                   minlength=T)
+            elig = hc.gate(alloc_t, cl.host_cap.sum(0), queued_t)
         while queue:
-            _, gid = queue[0]
+            if elig is None:
+                i0 = 0
+            else:
+                # FIFO head among ELIGIBLE tenants (queue is sorted by
+                # (submit0, gid), so the first eligible entry is the
+                # same head the fused tick's masked argmin selects)
+                i0 = next((i for i, (_, g) in enumerate(queue)
+                           if elig[wl.tenant[g]]), -1)
+                if i0 < 0:
+                    break
+            _, gid = queue[i0]
             slot = cl.admit(gid, wl, t)
             if slot < 0:
                 break
-            queue.pop(0)
+            queue.pop(i0)
+            if hc is not None:
+                hc.note_admitted(int(wl.tenant[gid]))
             if not cfg.work_lost_on_kill and gid in saved_work:
                 cl.work_done[slot] = saved_work.pop(gid)  # resume from ckpt
             mon.reset_slot(slot * C + np.arange(C))
@@ -462,5 +530,11 @@ def run_sim(cfg: SimConfig, wl: Workload | None = None, *,
 
     if calib is not None:
         res.calibration = calib.report()
+        gb = calib.group_report()
+        if gb is not None:
+            res.calibration["groups"] = gb
+    if hc is not None:
+        res.tenancy = tenancy_summary(cfg.control, wl, res.turnaround,
+                                      res.failed_apps, hc.arrays())
     res.finalize(t)
     return res

@@ -185,6 +185,11 @@ def run_sim_reference(cfg: SimConfig, wl: Workload | None = None, *,
         raise NotImplementedError(
             "engine_ref has no conformal-calibration path; run the "
             "vectorized engine or disable cfg.calibration")
+    if cfg.control.enabled:
+        # same frozen-seed rule for the multi-tenant control plane
+        raise NotImplementedError(
+            "engine_ref has no control-plane path; run the vectorized "
+            "engine or disable cfg.control")
     wl = wl if wl is not None else build_trace(cfg.workload)
     N, C = wl.n_apps, wl.max_components
     cl = Cluster(cfg.cluster, C)

@@ -76,6 +76,11 @@ class SimResults:
     # engines gather ready rows dynamically and never fill it, and the
     # engine-agreement contracts compare summaries.
     forecast_rows: dict | None = None
+    # multi-tenant control-plane telemetry (repro.control): per-tenant
+    # fairness / SLO / turnaround block, filled only when
+    # SimConfig.control is enabled — tenancy-off summaries (and the
+    # engine-equivalence contracts) are unchanged.
+    tenancy: dict | None = None
 
     def record_completion(self, gid: int, submit: float, t: float) -> None:
         self.turnaround[int(gid)] = float(t - submit)
@@ -124,4 +129,6 @@ class SimResults:
         }
         if self.calibration is not None:
             out["calibration"] = self.calibration
+        if self.tenancy is not None:
+            out["tenancy"] = self.tenancy
         return out

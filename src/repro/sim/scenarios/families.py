@@ -84,18 +84,37 @@ def _demands(rng, N: int, C: int, exists, is_elastic,
 
 
 def _assemble(*, submit, is_elastic, is_jumpy, n_core, n_elastic, runtime,
-              cpu_req, mem_req, is_core, levels, cfg) -> Trace:
+              cpu_req, mem_req, is_core, levels, cfg,
+              tenant=None, slo=None) -> Trace:
     """Sort by submit, cast, mask absent components, validate."""
+    N = len(np.asarray(submit))
     cols = sort_by_submit(
         np.asarray(submit, np.float32),
         is_elastic=is_elastic, is_jumpy=is_jumpy, n_core=n_core,
         n_elastic=n_elastic, runtime=np.asarray(runtime, np.float32),
-        cpu_req=cpu_req, mem_req=mem_req, is_core=is_core, levels=levels)
+        cpu_req=cpu_req, mem_req=mem_req, is_core=is_core, levels=levels,
+        tenant=(np.zeros(N, np.int64) if tenant is None
+                else np.asarray(tenant, np.int64)),
+        slo=(np.zeros(N, np.int64) if slo is None
+             else np.asarray(slo, np.int64)))
     exists = cols["cpu_req"] > 0
     cols["levels"] = np.clip(
         cols["levels"] * exists[:, :, None, None], 0.0, 1.0
     ).astype(np.float32)
     return Trace(cfg=cfg, **cols).validate()
+
+
+def _tenants(rng, N: int, n_tenants: int, skew: float) -> np.ndarray:
+    """Zipf-skewed tenant assignment (tenant 0 is the heaviest).
+
+    Drawn at the very END of each builder's rng stream, and consuming
+    NOTHING when ``n_tenants <= 1`` — so every pre-control-plane trace
+    (the default single-tenant configs) is bit-identical to the seed
+    generators."""
+    if n_tenants <= 1:
+        return np.zeros(N, np.int64)
+    w = (1.0 + np.arange(n_tenants)) ** -float(skew)
+    return rng.choice(n_tenants, size=N, p=w / w.sum()).astype(np.int64)
 
 
 def _phase_profile(submit, runtime, *, day_s: float, peak_shift: float,
@@ -136,6 +155,10 @@ class DiurnalConfig:
     max_cpu: float = 2.0
     min_mem: float = 1.0
     max_mem: float = 24.0
+    # control plane: Zipf-skewed tenant assignment (1 = single tenant,
+    # bit-identical to the pre-tenancy generator)
+    n_tenants: int = 1
+    tenant_skew: float = 1.0
 
 
 @register("diurnal", DiurnalConfig,
@@ -174,11 +197,14 @@ def build_diurnal(cfg: DiurnalConfig) -> Trace:
     lv = lv + rng.normal(0.0, cfg.noise, lv.shape)
     levels = np.clip(lv, 0.02, 1.0)
 
+    is_jumpy = rng.rand(N) < cfg.jumpy_frac
+    tenant = _tenants(rng, N, cfg.n_tenants, cfg.tenant_skew)
     return _assemble(submit=submit, is_elastic=is_elastic,
-                     is_jumpy=rng.rand(N) < cfg.jumpy_frac,
+                     is_jumpy=is_jumpy,
                      n_core=n_core, n_elastic=n_elastic, runtime=runtime,
                      cpu_req=cpu_req, mem_req=mem_req, is_core=is_core,
-                     levels=levels, cfg=cfg)
+                     levels=levels, cfg=cfg, tenant=tenant,
+                     slo=np.ones(N, np.int64))   # services: "standard"
 
 
 # ----------------------------------------------------------------------
@@ -206,6 +232,8 @@ class FlashcrowdConfig:
     max_cpu: float = 2.0
     min_mem: float = 1.0
     max_mem: float = 20.0
+    n_tenants: int = 1
+    tenant_skew: float = 1.0
 
 
 @register("flashcrowd", FlashcrowdConfig,
@@ -266,11 +294,13 @@ def build_flashcrowd(cfg: FlashcrowdConfig) -> Trace:
     levels = np.where(is_burst[:, None, None, None], burst_lv, walk)
     levels = np.clip(levels, 0.02, 1.0)
 
+    is_jumpy = rng.rand(N) < cfg.jumpy_frac
+    tenant = _tenants(rng, N, cfg.n_tenants, cfg.tenant_skew)
     return _assemble(submit=submit, is_elastic=is_elastic,
-                     is_jumpy=rng.rand(N) < cfg.jumpy_frac,
+                     is_jumpy=is_jumpy,
                      n_core=n_core, n_elastic=n_elastic, runtime=runtime,
                      cpu_req=cpu_req, mem_req=mem_req, is_core=is_core,
-                     levels=levels, cfg=cfg)
+                     levels=levels, cfg=cfg, tenant=tenant)
 
 
 # ----------------------------------------------------------------------
@@ -296,6 +326,8 @@ class HeavytailConfig:
     plateau: float = 0.92          # steady-state utilization level
     dip_prob: float = 0.06         # checkpoint/GC dips off the plateau
     jumpy_frac: float = 0.15
+    n_tenants: int = 1
+    tenant_skew: float = 1.0
 
 
 @register("heavytail", HeavytailConfig,
@@ -336,11 +368,13 @@ def build_heavytail(cfg: HeavytailConfig) -> Trace:
     lv = np.where(dips, rng.uniform(0.3, 0.6, lv.shape), lv)
     levels = np.clip(lv + rng.normal(0.0, 0.03, lv.shape), 0.02, 1.0)
 
+    is_jumpy = rng.rand(N) < cfg.jumpy_frac
+    tenant = _tenants(rng, N, cfg.n_tenants, cfg.tenant_skew)
     return _assemble(submit=submit, is_elastic=is_elastic,
-                     is_jumpy=rng.rand(N) < cfg.jumpy_frac,
+                     is_jumpy=is_jumpy,
                      n_core=n_core, n_elastic=n_elastic, runtime=runtime,
                      cpu_req=cpu_req, mem_req=mem_req, is_core=is_core,
-                     levels=levels, cfg=cfg)
+                     levels=levels, cfg=cfg, tenant=tenant)
 
 
 # ----------------------------------------------------------------------
@@ -371,6 +405,8 @@ class ColocatedConfig:
     svc_max_mem: float = 48.0
     batch_min_mem: float = 1.0
     batch_max_mem: float = 16.0
+    n_tenants: int = 1
+    tenant_skew: float = 1.0
 
 
 @register("colocated", ColocatedConfig,
@@ -414,8 +450,12 @@ def build_colocated(cfg: ColocatedConfig) -> Trace:
     lv[..., 1] = np.maximum(lv[..., 1], 0.5 * tide[:, None, :])
     levels = np.clip(lv + rng.normal(0.0, cfg.noise, lv.shape), 0.02, 1.0)
 
+    is_jumpy = rng.rand(N) < cfg.jumpy_frac
+    tenant = _tenants(rng, N, cfg.n_tenants, cfg.tenant_skew)
+    # latency-critical services buy "premium", batch rides "best-effort"
+    slo = np.where(is_service, 2, 0).astype(np.int64)
     return _assemble(submit=submit, is_elastic=is_elastic,
-                     is_jumpy=rng.rand(N) < cfg.jumpy_frac,
+                     is_jumpy=is_jumpy,
                      n_core=n_core, n_elastic=n_elastic, runtime=runtime,
                      cpu_req=cpu_req, mem_req=mem_req, is_core=is_core,
-                     levels=levels, cfg=cfg)
+                     levels=levels, cfg=cfg, tenant=tenant, slo=slo)

@@ -103,11 +103,13 @@ def _spec_for(cfg: Any) -> ScenarioSpec:
 
 
 # the only fields that carry across FAMILIES when the sweep's scenario
-# axis swaps workloads: grid scale and seed.  Shape parameters (runtime
-# ranges, demand ranges, mix fractions) stay family-authentic — carrying
-# a CI-scale google max_runtime into `diurnal` would erase its day-cycle
-# character.
-_CARRY = ("n_apps", "max_components", "seed")
+# axis swaps workloads: grid scale, seed and the tenant layout.  Shape
+# parameters (runtime ranges, demand ranges, mix fractions) stay
+# family-authentic — carrying a CI-scale google max_runtime into
+# `diurnal` would erase its day-cycle character.  Tenancy carries
+# because it is population structure, not load shape: a sweep pairing a
+# `tenancy` axis with a `scenario` axis keeps the same tenant mix.
+_CARRY = ("n_apps", "max_components", "seed", "n_tenants", "tenant_skew")
 
 
 def make_config(name: str, base: Any = None, **overrides: Any):

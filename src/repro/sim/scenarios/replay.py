@@ -3,8 +3,12 @@
 File format — one row per *component*, grouped by application:
 
     app_id, submit, runtime, is_elastic, is_jumpy, component, is_core,
-    cpu_req, mem_req, cpu_levels, mem_levels
+    cpu_req, mem_req, cpu_levels, mem_levels [, tenant_id, slo_class]
 
+``tenant_id`` / ``slo_class`` are optional (files written before the
+control plane load as a single tenant 0, SLO "best-effort"); string
+tenant ids are densely re-encoded, ``slo_class`` accepts a class name
+or its integer code.
 ``cpu_levels`` / ``mem_levels`` are ``;``-joined utilization fractions
 (of the reservation) sampled anywhere along the component's lifetime —
 any length; they are linearly resampled to the engine's ``SEGMENTS``
@@ -28,6 +32,7 @@ import os
 
 import numpy as np
 
+from repro.control.config import SLO_CLASSES
 from repro.sim.scenarios.registry import register
 from repro.sim.scenarios.schema import CPU, MEM, SEGMENTS, Trace, sort_by_submit
 
@@ -36,9 +41,11 @@ try:
 except ImportError:                        # pragma: no cover - env-dependent
     _pd = None
 
+# tenant_id / slo_class are OPTIONAL on load (pre-control-plane files
+# back-compat to tenant 0, "best-effort"); save_trace always writes them
 COLUMNS = ("app_id", "submit", "runtime", "is_elastic", "is_jumpy",
            "component", "is_core", "cpu_req", "mem_req",
-           "cpu_levels", "mem_levels")
+           "cpu_levels", "mem_levels", "tenant_id", "slo_class")
 
 # default 5-minute reading cadence of the Azure public VM traces, used
 # when a VM has a single reading (no inferable interval)
@@ -82,6 +89,7 @@ def _azure_rows(rows: list[dict]) -> list[dict]:
 
         mem = [mem_level(r) for r in rs]
         out.append({
+            "tenant_id": rs[0].get("tenant", 0) or 0,
             "app_id": vmid,
             "submit": ts[0],
             "runtime": max(ts[-1] - ts[0] + dt, dt),
@@ -138,6 +146,7 @@ def _alibaba_rows(rows: list[dict]) -> list[dict]:
             return 0.5 if v != v else min(max(v / 100.0, 0.0), 1.0)
 
         out.append({
+            "tenant_id": rs[0].get("tenant", 0) or 0,
             "app_id": cid,
             "submit": ts[0],
             "runtime": max(ts[-1] - ts[0] + dt, dt),
@@ -213,6 +222,8 @@ def save_trace(trace: Trace, path: str) -> None:
                 "mem_req": float(trace.mem_req[gid, c]),
                 "cpu_levels": _fmt_levels(trace.levels[gid, c, :, CPU]),
                 "mem_levels": _fmt_levels(trace.levels[gid, c, :, MEM]),
+                "tenant_id": int(trace.tenant[gid]),
+                "slo_class": SLO_CLASSES[int(trace.slo[gid])],
             })
     if path.endswith(".parquet"):
         if _pd is None:
@@ -224,6 +235,31 @@ def save_trace(trace: Trace, path: str) -> None:
         w = csv.DictWriter(f, fieldnames=COLUMNS)
         w.writeheader()
         w.writerows(rows)
+
+
+def _slo_code(v) -> int:
+    """``slo_class`` cell -> integer code: a class name, a numeric
+    code, or blank/absent (-> 0, "best-effort")."""
+    if v in ("", None) or v != v:           # blank cell or NaN
+        return 0
+    s = str(v)
+    if s in SLO_CLASSES:
+        return SLO_CLASSES.index(s)
+    return int(float(s))
+
+
+def _tenant_codes(raw: list) -> np.ndarray:
+    """``tenant_id`` cells -> dense integer codes.
+
+    Integer-valued cells pass through; any non-numeric id (string
+    tenant names) densely re-encodes ALL ids by sorted unique value,
+    so foreign traces can tag tenants symbolically."""
+    vals = ["0" if v in ("", None) or v != v else str(v) for v in raw]
+    try:
+        return np.asarray([int(float(v)) for v in vals], np.int64)
+    except ValueError:
+        uniq = {v: i for i, v in enumerate(sorted(set(vals)))}
+        return np.asarray([uniq[v] for v in vals], np.int64)
 
 
 def _read_rows(path: str) -> list[dict]:
@@ -283,12 +319,18 @@ def load_trace(path: str, n_apps: int = 0, max_components: int = 0,
     mem_req = np.zeros((N, C), np.float32)
     is_core = np.zeros((N, C), bool)
     levels = np.zeros((N, C, SEGMENTS, 2), np.float32)
+    slo = np.zeros(N, np.int64)
+    raw_tenant = []
 
     for gid, rs in enumerate(apps):
         submit[gid] = float(rs[0]["submit"])
         runtime[gid] = float(rs[0]["runtime"])
         is_elastic[gid] = bool(int(rs[0]["is_elastic"]))
         is_jumpy[gid] = bool(int(rs[0]["is_jumpy"]))
+        # tenancy columns are optional: tenant-less files back-compat
+        # to a single tenant 0 on the "best-effort" SLO class
+        raw_tenant.append(rs[0].get("tenant_id"))
+        slo[gid] = _slo_code(rs[0].get("slo_class"))
         # components pack into slots 0..k in file order (slot ids in the
         # padded table are positional, not semantic)
         for c, r in enumerate(rs):
@@ -302,7 +344,8 @@ def load_trace(path: str, n_apps: int = 0, max_components: int = 0,
     levels = np.clip(levels * exists[:, :, None, None], 0.0, 1.0)
     cols = sort_by_submit(submit, runtime=runtime, is_elastic=is_elastic,
                           is_jumpy=is_jumpy, cpu_req=cpu_req,
-                          mem_req=mem_req, is_core=is_core, levels=levels)
+                          mem_req=mem_req, is_core=is_core, levels=levels,
+                          tenant=_tenant_codes(raw_tenant), slo=slo)
     exists = cols["cpu_req"] > 0
     return Trace(n_core=cols["is_core"].sum(1).astype(np.int64),
                  n_elastic=(exists & ~cols["is_core"]).sum(1).astype(np.int64),

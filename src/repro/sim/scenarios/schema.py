@@ -19,7 +19,13 @@ Invariants (checked by :meth:`Trace.validate`):
     == False``) carry no elastic components;
   * utilization levels live in ``[0, 1]`` (fraction of the reservation
     — usage can never exceed what was reserved) and are zero for absent
-    components.
+    components;
+  * tenant ids are nonnegative and SLO classes index
+    ``repro.control.config.SLO_CLASSES``.  Both columns are OPTIONAL:
+    tenant-less sources back-compat to a single default tenant 0 with
+    the ``best-effort`` SLO class (``__post_init__`` normalizes
+    ``None`` to zeros), so every pre-control-plane trace still
+    validates and runs bit-identically.
 """
 from __future__ import annotations
 
@@ -27,6 +33,8 @@ import dataclasses
 from typing import Any
 
 import numpy as np
+
+from repro.control.config import SLO_CLASSES
 
 #: number of piecewise-linear utilization knots per component profile
 SEGMENTS = 32
@@ -52,6 +60,17 @@ class Trace:
     is_core: np.ndarray       # (N, C) bool
     levels: np.ndarray        # (N, C, SEGMENTS, 2) utilization fraction
     cfg: Any = None           # the scenario config that built this trace
+    tenant: np.ndarray = None  # (N,) int tenant id (None -> all tenant 0)
+    slo: np.ndarray = None     # (N,) int index into SLO_CLASSES
+
+    def __post_init__(self):
+        # tenant-less back-compat: a trace built without the control
+        # plane is a single default tenant on the weakest SLO class
+        n = self.submit.shape[0] if isinstance(self.submit, np.ndarray) else 0
+        if self.tenant is None:
+            self.tenant = np.zeros(n, np.int64)
+        if self.slo is None:
+            self.slo = np.zeros(n, np.int64)
 
     @property
     def n_apps(self) -> int:
@@ -60,6 +79,10 @@ class Trace:
     @property
     def max_components(self) -> int:
         return self.cpu_req.shape[1]
+
+    @property
+    def n_tenants(self) -> int:
+        return int(self.tenant.max()) + 1 if self.tenant.size else 1
 
     def usage(self, gid: np.ndarray, progress: np.ndarray) -> np.ndarray:
         """(len(gid), C, 2) instantaneous usage at given progress in [0,1].
@@ -95,7 +118,8 @@ class Trace:
         shapes = {"submit": (N,), "is_elastic": (N,), "is_jumpy": (N,),
                   "n_core": (N,), "n_elastic": (N,), "runtime": (N,),
                   "cpu_req": (N, C), "mem_req": (N, C), "is_core": (N, C),
-                  "levels": (N, C, SEGMENTS, 2)}
+                  "levels": (N, C, SEGMENTS, 2),
+                  "tenant": (N,), "slo": (N,)}
         for name, want in shapes.items():
             a = getattr(self, name)
             if not isinstance(a, np.ndarray):
@@ -138,6 +162,12 @@ class Trace:
             p.append("levels: outside [0, 1] (fraction of reservation)")
         if (self.levels[~exists] != 0).any():
             p.append("levels: nonzero for absent components")
+
+        if (self.tenant < 0).any():
+            p.append("tenant: negative tenant ids")
+        if (self.slo < 0).any() or (self.slo >= len(SLO_CLASSES)).any():
+            p.append(f"slo: outside [0, {len(SLO_CLASSES) - 1}] "
+                     f"(indexes SLO_CLASSES)")
 
         if p:
             raise TraceValidationError("; ".join(p))

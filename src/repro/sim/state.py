@@ -36,7 +36,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.uncertainty.online import CalibState, calib_init, calib_report
+from repro.control import TenantState, control_init, tenancy_summary
+from repro.core.uncertainty.online import (CalibState, calib_group_report,
+                                           calib_init, calib_report)
 from repro.sim.metrics import SimResults
 
 Array = jax.Array
@@ -67,6 +69,7 @@ class DeviceTrace:
     is_jumpy: Array   # (N,) bool — step-change (unlearnable) profiles
     levels: Array     # (N, C, SEGMENTS, 2) f32 utilization knots
     exists: Array     # (N, C) bool == cpu_req > 0
+    tenant: Array     # (N,) i32 owning tenant (all zero when untagged)
 
     @classmethod
     def from_trace(cls, wl) -> "DeviceTrace":
@@ -78,7 +81,8 @@ class DeviceTrace:
             is_core=jnp.asarray(wl.is_core, bool),
             is_jumpy=jnp.asarray(wl.is_jumpy, bool),
             levels=jnp.asarray(wl.levels, jnp.float32),
-            exists=jnp.asarray(wl.cpu_req > 0, bool))
+            exists=jnp.asarray(wl.cpu_req > 0, bool),
+            tenant=jnp.asarray(wl.tenant, jnp.int32))
 
     @classmethod
     def from_traces(cls, wls, pad_to: int | None = None) -> "DeviceTrace":
@@ -104,7 +108,8 @@ class DeviceTrace:
             is_core=col(lambda w: w.is_core, bool),
             is_jumpy=col(lambda w: w.is_jumpy, bool),
             levels=col(lambda w: w.levels, np.float32),
-            exists=col(lambda w: w.cpu_req > 0, bool))
+            exists=col(lambda w: w.cpu_req > 0, bool),
+            tenant=col(lambda w: w.tenant, np.int32))
 
 
 @jax.tree_util.register_dataclass
@@ -146,6 +151,10 @@ class SimState:
     # conformal calibration rings (None when calibration is off — the
     # step function is specialized per config, so presence is static)
     calib: CalibState | None
+    # tenant accounting (None when the control plane is off — same
+    # static-presence convention, so tenancy-off programs are
+    # structurally identical to pre-control-plane ones)
+    tenancy: TenantState | None
 
 
 def init_state(cfg, n_apps: int, max_components: int,
@@ -163,9 +172,14 @@ def init_state(cfg, n_apps: int, max_components: int,
     zi = lambda *s: jnp.zeros(B + s, jnp.int32)    # noqa: E731
     zf = lambda *s: jnp.zeros(B + s, jnp.float32)  # noqa: E731
     zb = lambda *s: jnp.zeros(B + s, bool)         # noqa: E731
+    tenancy = None
+    if cfg.control.enabled:
+        tenancy = control_init(cfg.control, batch=batch)
     calib = None
     if cfg.calibration.enabled and cfg.forecaster != "oracle":
-        calib = calib_init(2 * A * C, cfg.calibration, batch=batch)
+        calib = calib_init(2 * A * C, cfg.calibration, batch=batch,
+                           n_groups=(cfg.control.max_tenants
+                                     if cfg.control.enabled else 0))
     return SimState(
         slot_gid=jnp.full(B + (A,), -1, jnp.int32),
         work_done=zf(A), comp_running=zb(A, C), comp_host=zi(A, C),
@@ -175,7 +189,7 @@ def init_state(cfg, n_apps: int, max_components: int,
         finish_t=zf(N), saved_work=zf(N), has_saved=zb(N),
         t=zf(),
         failure_events=zi(), oom_kills=zi(), full_preemptions=zi(),
-        partial_preemptions=zi(), calib=calib)
+        partial_preemptions=zi(), calib=calib, tenancy=tenancy)
 
 
 @jax.tree_util.register_dataclass
@@ -251,5 +265,19 @@ def drain_results(cfg, wl, state: SimState,
     res.partial_preemptions = int(state.partial_preemptions)
     if state.calib is not None:
         res.calibration = calib_report(state.calib, cfg.calibration)
+        gb = calib_group_report(state.calib, cfg.calibration)
+        if gb is not None:
+            res.calibration["groups"] = gb
+    if state.tenancy is not None:
+        ten = state.tenancy
+        res.tenancy = tenancy_summary(
+            cfg.control, wl, res.turnaround, res.failed_apps,
+            dict(credit=np.asarray(ten.credit),
+                 admitted=np.asarray(ten.admitted),
+                 throttled=np.asarray(ten.throttled),
+                 completed=np.asarray(ten.completed),
+                 failed=np.asarray(ten.failed),
+                 share_sum=np.asarray(ten.share_sum),
+                 active_ticks=np.asarray(ten.active_ticks)))
     res.finalize(float(state.t))
     return res

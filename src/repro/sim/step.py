@@ -50,6 +50,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.control.credit import credit_quantile, credit_step
+from repro.control.device import device_weights
+from repro.control.fairness import dominant_shares, gate_mask
 from repro.core.forecast.base import peak_over_horizon, persistence_peak
 from repro.core.shaper import RAW_POLICIES, ShapeProblem
 from repro.core.shaper.safeguard import (shaped_demand_raw,
@@ -149,6 +152,13 @@ def _evict_slots(st: SimState, slots_mask: Array) -> SimState:
         comp_running=st.comp_running & ~m[:, None],
         alloc=jnp.where(m[:, None, None], 0.0, st.alloc),
         work_done=jnp.where(m, 0.0, st.work_done))
+
+
+def _tenant_counts(tenant: Array, mask: Array, T: int) -> Array:
+    """(T,) i32 count of masked apps per tenant (one-hot reduction —
+    the control plane's scatter-free ``np.add.at``)."""
+    return ((tenant[:, None] == jnp.arange(T)[None, :])
+            & mask[:, None]).sum(0).astype(jnp.int32)
 
 
 def _worst_fit(free: Array, cpu: Array, mem: Array) -> tuple[Array, Array]:
@@ -271,14 +281,35 @@ def _shaped_demands(cfg, model, tr: DeviceTrace, st: SimState,
         shaped = shaped_demand_raw(mean, req_rows, var, cfg.safeguard)
         calib = st.calib
     else:
-        scale = calib_scales(st.calib, cfg.calibration, cfg.safeguard.k2)
+        # per-tenant tier (control plane on): rows map to the tenant
+        # owning the slot (-1 for empty slots); with credit enabled the
+        # target quantile is the tenant's credit-modulated level —
+        # computed from the CURRENT (previous tick's) credit, exactly
+        # like the host engine reads q_groups before its gate update
+        groups = q_rows = q_groups = None
+        if st.tenancy is not None and st.calib.group is not None:
+            tslot = jnp.where(st.slot_gid >= 0, tr.tenant[gid], -1)
+            g1 = jnp.repeat(tslot, C).astype(jnp.int32)
+            groups = jnp.concatenate([g1, g1])
+            if cfg.control.credit:
+                qt = credit_quantile(st.tenancy.credit, st.calib.q,
+                                     cfg.control.q_spread,
+                                     cfg.calibration.q_min,
+                                     cfg.calibration.q_max)
+                q_rows = jnp.where(groups >= 0,
+                                   qt[jnp.maximum(groups, 0)], st.calib.q)
+                q_groups = qt
+        scale = calib_scales(st.calib, cfg.calibration, cfg.safeguard.k2,
+                             groups=groups, q_rows=q_rows,
+                             q_groups=q_groups)
         shaped = shaped_demand_scaled_raw(
             mean, req_rows, var, jnp.float32(cfg.safeguard.k1), scale)
         sigma = jnp.sqrt(jnp.maximum(var, 0.0)).astype(jnp.float32)
         ready2 = jnp.concatenate([ready, ready])
         calib = calib_begin(st.calib, ready2, mean.astype(jnp.float32),
                             sigma, scale.astype(jnp.float32),
-                            jnp.tile(st.mon_count, 2), cfg.horizon)
+                            jnp.tile(st.mon_count, 2), cfg.horizon,
+                            groups=groups)
     st = dataclasses.replace(st, calib=calib)
 
     ready2 = jnp.concatenate([ready, ready])
@@ -443,10 +474,13 @@ def _resolve_oom(tr: DeviceTrace, st: SimState, usage: Array,
 
 
 def _admit_queued(cfg, tr: DeviceTrace, st: SimState, t: Array,
-                  host_cap: Array) -> tuple[SimState, Array]:
+                  host_cap: Array,
+                  elig_app: Array | None = None) -> tuple[SimState, Array]:
     """FIFO admission: pop (submit0, gid)-ascending heads while they
     admit (all core components must fit, worst-fit placement) — the
     engine's scheduler loop as an event-bounded ``while_loop``.
+    ``elig_app`` (control plane, (N,) bool) restricts head selection to
+    apps of gate-eligible tenants; ineligible entries stay queued.
     Returns (state, monitor rows to reset)."""
     A, C = st.comp_running.shape
     N = tr.submit.shape[0]
@@ -498,10 +532,14 @@ def _admit_queued(cfg, tr: DeviceTrace, st: SimState, t: Array,
     def cond(carry):
         return carry[2]
 
+    def _q(queued):
+        return queued if elig_app is None else queued & elig_app
+
     def body(carry):
         cur, resets, _ = carry
-        has_q = cur.queued.any()
-        head = jnp.argmin(jnp.where(cur.queued, tr.submit, jnp.inf))
+        qm = _q(cur.queued)
+        has_q = qm.any()
+        head = jnp.argmin(jnp.where(qm, tr.submit, jnp.inf))
         empty = cur.slot_gid < 0
         slot = jnp.argmax(empty)
         fits, placement = try_place(cur, head)
@@ -533,12 +571,12 @@ def _admit_queued(cfg, tr: DeviceTrace, st: SimState, t: Array,
             queued=cur.queued & ~ogid,
             has_saved=cur.has_saved & ~ogid)
         resets = resets | jnp.repeat(osl, C)
-        cont = ok & nxt.queued.any() & (nxt.slot_gid < 0).any()
+        cont = ok & _q(nxt.queued).any() & (nxt.slot_gid < 0).any()
         return nxt, resets, cont
 
     # no empty slot (saturated cluster) => the head cannot admit: skip
     # the whole loop instead of paying one doomed placement attempt
-    cont0 = st.queued.any() & (st.slot_gid < 0).any()
+    cont0 = _q(st.queued).any() & (st.slot_gid < 0).any()
     st, resets, _ = jax.lax.while_loop(
         cond, body, (st, jnp.zeros((A * C,), bool), cont0))
     return st, resets
@@ -631,7 +669,20 @@ def fused_tick(cfg, model, tr: DeviceTrace,
 
     # 2. progress + completions (monitor resets accumulate across phases
     # and apply once at end of tick — see _mon_reset)
+    ctl = st.tenancy is not None          # static pytree-structure branch
+    done_before = st.done
     st, resets = _completions(tr, st, t, tick)
+
+    # control-plane event accounting (mirrors HostControl.note_*): good
+    # events are completions + covered conformal resolutions, bad events
+    # are failures + miscoverage; `fail_t` tracks failures alone for the
+    # per-tenant failed counter.
+    if ctl:
+        Tn = cfg.control.max_tenants
+        comp_t = _tenant_counts(tr.tenant, st.done & ~done_before, Tn)
+        good_t = comp_t
+        bad_t = jnp.zeros((Tn,), jnp.int32)
+        fail_t = jnp.zeros((Tn,), jnp.int32)
 
     # 3. monitor sampling
     gid = jnp.maximum(st.slot_gid, 0)
@@ -641,10 +692,17 @@ def fused_tick(cfg, model, tr: DeviceTrace,
     if st.calib is not None:
         rows = jnp.concatenate([usage[:, :, CPU].reshape(-1),
                                 usage[:, :, MEM].reshape(-1)])
+        grp = ctl and st.calib.group_resolved is not None
+        if grp:
+            gr0, ge0 = st.calib.group_resolved, st.calib.group_errors
         st = dataclasses.replace(
             st, calib=calib_observe(st.calib, rows,
                                     jnp.tile(st.mon_count, 2),
                                     cfg.calibration, active=active))
+        if grp:
+            derr = st.calib.group_errors - ge0
+            good_t = good_t + (st.calib.group_resolved - gr0) - derr
+            bad_t = bad_t + derr
 
     # 4. shaping (static branch: the baseline policy never shapes).
     # The engine skips this phase when no slot is occupied; here an
@@ -660,12 +718,60 @@ def fused_tick(cfg, model, tr: DeviceTrace,
         st = dataclasses.replace(
             st, failed=st.failed | conflict, queued=st.queued | conflict)
         resets = resets | resets4
+        if ctl:
+            c4 = _tenant_counts(tr.tenant, conflict, Tn)
+            fail_t = fail_t + c4
+            bad_t = bad_t + c4
 
     # 5. OS OOM (uncontrolled failures) — fails recorded + requeued
+    q5 = st.queued
     st, usage, resets5 = _resolve_oom(tr, st, usage, host_cap)
+    if ctl:
+        oomed = _tenant_counts(tr.tenant, st.queued & ~q5, Tn)
+        fail_t = fail_t + oomed
+        bad_t = bad_t + oomed
 
-    # 6. scheduler: FIFO admission + elastic re-placement
-    st, resets6 = _admit_queued(cfg, tr, st, t, host_cap)
+    # 6. scheduler: FIFO admission + elastic re-placement.  With the
+    # control plane on, a wDRF gate runs first: per-tenant dominant
+    # shares from the live allocation table decide which tenants may
+    # admit this tick (HostControl.gate, vectorized).
+    elig_app = None
+    if ctl:
+        ten = st.tenancy
+        credit = (credit_step(ten.credit, good_t, bad_t,
+                              cfg.control.credit_gamma,
+                              cfg.control.credit_floor)
+                  if cfg.control.credit else ten.credit)
+        occ = st.slot_gid >= 0
+        tslot = jnp.where(occ, tr.tenant[jnp.maximum(st.slot_gid, 0)], -1)
+        oh_slot = tslot[:, None] == jnp.arange(Tn)[None, :]       # (A, T)
+        alloc_t = jnp.where(oh_slot[:, :, None],
+                            st.alloc.sum(1)[:, None, :], 0.0).sum(0)
+        share = dominant_shares(alloc_t, host_cap.sum(0),
+                                device_weights(cfg.control))
+        queued_t = _tenant_counts(tr.tenant, st.queued, Tn)
+        active_t = (share > 0) | (queued_t > 0)
+        if cfg.control.gate:
+            slack = (jnp.float32(cfg.control.slack) * credit
+                     if cfg.control.credit
+                     else jnp.float32(cfg.control.slack))
+            elig_t = gate_mask(share, active_t, slack)
+        else:
+            elig_t = jnp.ones((Tn,), bool)
+        st = dataclasses.replace(st, tenancy=dataclasses.replace(
+            ten, credit=credit,
+            throttled=ten.throttled + jnp.where(elig_t, 0, queued_t),
+            completed=ten.completed + comp_t,
+            failed=ten.failed + fail_t,
+            share_sum=ten.share_sum + (share * active_t).astype(jnp.float32),
+            active_ticks=ten.active_ticks + active_t.astype(jnp.int32)))
+        elig_app = elig_t[jnp.clip(tr.tenant, 0, Tn - 1)]
+        q6 = st.queued
+    st, resets6 = _admit_queued(cfg, tr, st, t, host_cap, elig_app)
+    if ctl:
+        st = dataclasses.replace(st, tenancy=dataclasses.replace(
+            st.tenancy, admitted=st.tenancy.admitted
+            + _tenant_counts(tr.tenant, q6 & ~st.queued, Tn)))
     st = _place_missing_elastic(tr, st, t, host_cap)
     st = _mon_reset(st, resets | resets5 | resets6)
 
@@ -697,8 +803,8 @@ def _cfg_key(cfg):
     (NOT the workload config — shapes are keyed separately, so sweep
     cells across scenarios share compilations)."""
     return (cfg.cluster, cfg.policy, cfg.forecaster, cfg.safeguard,
-            cfg.calibration, cfg.window, cfg.grace, cfg.horizon, cfg.gp,
-            cfg.arima, cfg.work_lost_on_kill)
+            cfg.calibration, cfg.control, cfg.window, cfg.grace,
+            cfg.horizon, cfg.gp, cfg.arima, cfg.work_lost_on_kill)
 
 
 _CHUNK_CACHE: dict = {}

@@ -86,6 +86,19 @@ CALIBRATION_MODES: dict[str, dict] = {
 }
 
 
+# the "tenancy" axis sweeps control-plane *modes* by name: fully off
+# (bit-identical to the pre-control-plane engines), accounting-only
+# (shares/credit observed, nobody throttled), the wDRF admission gate,
+# and the gate with credit-aware shaping on top.  Field-level knobs
+# remain reachable via dotted paths ("control.slack", ...).
+TENANCY_MODES: dict[str, dict] = {
+    "off": dict(enabled=False),
+    "ungated": dict(enabled=True, gate=False, credit=False),
+    "wdrf": dict(enabled=True, gate=True, credit=False),
+    "credit": dict(enabled=True, gate=True, credit=True),
+}
+
+
 def _apply_overrides(cfg: SimConfig, overrides: Mapping[str, Any]) -> SimConfig:
     # "scenario" swaps the whole workload config and must resolve before
     # any "workload.*" field override can land on the new family
@@ -104,6 +117,15 @@ def _apply_overrides(cfg: SimConfig, overrides: Mapping[str, Any]) -> SimConfig:
             cfg = dataclasses.replace(
                 cfg, calibration=dataclasses.replace(
                     cfg.calibration, **CALIBRATION_MODES[value]))
+            continue
+        if path == "tenancy" and isinstance(value, str):
+            if value not in TENANCY_MODES:
+                raise ValueError(
+                    f"unknown tenancy mode {value!r} "
+                    f"(expected {sorted(TENANCY_MODES)})")
+            cfg = dataclasses.replace(
+                cfg, control=dataclasses.replace(
+                    cfg.control, **TENANCY_MODES[value]))
             continue
         cfg = _set_path(cfg, path, value)
     return cfg
@@ -654,6 +676,13 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
     ap.add_argument("--calibration", type=_csv(str), default=None,
                     help="safeguard-mode axis, any of: sigma (Eq. 9 "
                          "K2-band), conformal, adaptive")
+    ap.add_argument("--tenancy", type=_csv(str), default=None,
+                    help="control-plane mode axis, any of: off, ungated "
+                         "(accounting only), wdrf (admission gate), "
+                         "credit (gate + credit-aware shaping)")
+    ap.add_argument("--tenants", type=int, default=None,
+                    help="workload tenant count (workload.n_tenants); "
+                         "tenants are Zipf-skewed over apps")
     ap.add_argument("--target-q", type=float, default=None,
                     help="conformal target quantile (calibration.q)")
     ap.add_argument("--budget", type=float, default=None,
@@ -710,6 +739,10 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
         axes["safeguard.k2"] = args.k2
     if args.calibration:
         axes["calibration"] = args.calibration
+    if args.tenants is not None:
+        base = _set_path(base, "workload.n_tenants", args.tenants)
+    if args.tenancy:
+        axes["tenancy"] = args.tenancy
     result = run_grid(base, axes, seeds=range(args.seeds),
                       workers=args.workers, engine=args.engine,
                       batch_forecasts=not args.no_batch,

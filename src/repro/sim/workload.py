@@ -37,6 +37,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.sim.scenarios.families import _tenants
 from repro.sim.scenarios.registry import register
 from repro.sim.scenarios.schema import CPU, MEM, SEGMENTS, Trace  # noqa: F401
 
@@ -66,6 +67,10 @@ class WorkloadConfig:
     jumpy_frac: float = 0.25       # "unpredictable" apps (cf. [66]): step
                                    # changes instead of smooth ramps
     seed: int = 0
+    # control plane: Zipf-skewed tenant assignment (1 = single tenant,
+    # bit-identical to the pre-tenancy generator)
+    n_tenants: int = 1
+    tenant_skew: float = 1.0
 
 
 @register("google", WorkloadConfig,
@@ -128,9 +133,13 @@ def generate(cfg: WorkloadConfig) -> Trace:
     levels = (walk * exists[:, :, None, None]).astype(np.float32)
 
     is_jumpy = rng.rand(N) < cfg.jumpy_frac
+    # tenant draw LAST so n_tenants=1 (no draw) keeps the rng stream —
+    # and therefore the whole trace — bit-identical to the seed generator
+    tenant = _tenants(rng, N, cfg.n_tenants, cfg.tenant_skew)
     return Trace(submit=submit.astype(np.float32), is_elastic=is_elastic,
                  is_jumpy=is_jumpy,
                  n_core=n_core.astype(np.int64),
                  n_elastic=n_elastic.astype(np.int64),
                  runtime=runtime, cpu_req=cpu_req, mem_req=mem_req,
-                 is_core=is_core & exists, levels=levels, cfg=cfg).validate()
+                 is_core=is_core & exists, levels=levels, cfg=cfg,
+                 tenant=tenant).validate()

@@ -17,7 +17,7 @@ import pytest
 
 ROOT = Path(__file__).resolve().parents[1]
 SNIPPET_FILES = ("README.md", "docs/ARCHITECTURE.md",
-                 "docs/BENCHMARKS.md")
+                 "docs/BENCHMARKS.md", "docs/CONTROL_PLANE.md")
 COMPILE_ONLY = "docs-smoke: compile-only"
 
 

@@ -341,6 +341,116 @@ def test_online_calibrator_hierarchical_fallback():
     assert (np.abs(got - 0.5) < 0.2).all()
 
 
+def _feed_group(calib, rows, group, scores, c0=10):
+    """Resolve one prediction per (row, score) pair, all owned by
+    ``group`` — each row stays below ``min_scores`` while the group's
+    ring warms up."""
+    n = calib._group.shape[0]
+    for k, (r, s) in enumerate(zip(rows, scores)):
+        base = c0 + 3 * k
+        counts = np.full(n // 2, base)
+        calib.begin(np.asarray([r]), np.asarray([0.0], np.float32),
+                    np.asarray([1.0], np.float32),
+                    np.asarray([1.0], np.float32),   # bound for coverage
+                    np.asarray([base]),
+                    groups=np.asarray([group]))
+        usage = np.zeros(n, np.float32)
+        usage[r] = s
+        calib.observe(usage, counts + 1)
+        calib.observe(usage, counts + 2)
+
+
+def test_online_calibrator_group_tier():
+    """Per-tenant (group) conformal pools: a young series borrows its
+    GROUP's quantile before falling back to the shared pool — two
+    tenants with very different residual scales get different bands."""
+    calib = OnlineCalibrator(8, 2, 3.0,
+                             CalibrationConfig(enabled=True, min_scores=4),
+                             n_groups=2)
+    rng = np.random.RandomState(0)
+    lo = 0.4 + 0.02 * rng.rand(8).astype(np.float32)   # tenant 0: tight
+    hi = 4.0 + 0.20 * rng.rand(8).astype(np.float32)   # tenant 1: wild
+    _feed_group(calib, [0, 1, 2, 3] * 2, 0, lo, c0=10)
+    _feed_group(calib, [4, 5, 6, 7] * 2, 1, hi, c0=100)
+    assert calib.resolved == 16
+
+    r = np.asarray([0])
+    s0 = float(calib.scales(r, groups=np.asarray([0]))[0])
+    s1 = float(calib.scales(r, groups=np.asarray([1]))[0])
+    pooled = float(calib.scales(r)[0])
+    # group 0's band is far below the (spike-dominated) pool band; the
+    # pool's 0.9-quantile may tie group 1's exactly (same order stat)
+    assert s0 < pooled <= s1
+    assert s1 - s0 > 3.0
+    assert abs(s0 - lo.max()) < 0.1
+    assert abs(s1 - hi.max()) < 0.5
+    # an unknown group (-1) falls back to the pool tier
+    assert float(calib.scales(r, groups=np.asarray([-1]))[0]) == pooled
+
+    # per-group coverage accounting: bound 1.0 covers every lo score
+    # and none of the hi ones
+    rep = calib.group_report()
+    assert rep["resolved"] == [8, 8]
+    assert rep["miscovered"] == [0, 8]
+    assert rep["coverage"] == [1.0, 0.0]
+
+
+def test_online_calibrator_group_q_override():
+    """Per-row quantile overrides (the control plane's credit-widened
+    targets) move the group band monotonically."""
+    calib = OnlineCalibrator(4, 2, 3.0,
+                             CalibrationConfig(enabled=True, min_scores=4),
+                             n_groups=1)
+    scores = np.linspace(1.0, 2.0, 8).astype(np.float32)
+    _feed_group(calib, [0, 1] * 4, 0, scores)
+    r, g = np.asarray([2]), np.asarray([0])
+    mid = float(calib.scales(r, groups=g, q=np.asarray([0.5]))[0])
+    top = float(calib.scales(r, groups=g, q=np.asarray([1.0]))[0])
+    assert mid < top
+    assert top == pytest.approx(2.0, abs=1e-5)
+
+
+def test_device_group_tier_matches_host():
+    """jnp functional mirror (`calib_*`): same deploy/observe stream ->
+    identical group rings, counters and scale outputs."""
+    from repro.core.uncertainty.online import (calib_begin,
+                                               calib_group_report,
+                                               calib_init, calib_observe,
+                                               calib_scales)
+    cfg = CalibrationConfig(enabled=True, min_scores=4)
+    host = OnlineCalibrator(8, 2, 3.0, cfg, n_groups=2)
+    st = calib_init(8, cfg, n_groups=2)
+    rng = np.random.RandomState(1)
+    plan = [(r, 0, 0.5 + 0.1 * rng.rand()) for r in [0, 1, 2, 3] * 2] \
+        + [(r, 1, 3.0 + 0.5 * rng.rand()) for r in [4, 5, 6, 7] * 2]
+    for k, (r, g, s) in enumerate(plan):
+        base = 10 + 3 * k
+        counts = np.full(4, base)
+        host.begin(np.asarray([r]), np.asarray([0.0], np.float32),
+                   np.asarray([1.0], np.float32),
+                   np.asarray([2.0], np.float32), np.asarray([base]),
+                   groups=np.asarray([g]))
+        deploy = jnp.arange(8) == r
+        st = calib_begin(st, deploy, jnp.zeros(8), jnp.ones(8),
+                         jnp.full(8, 2.0), jnp.full(8, base), 2,
+                         groups=jnp.full(8, g, jnp.int32))
+        usage = np.zeros(8, np.float32)
+        usage[r] = s
+        for d in (1, 2):
+            host.observe(usage, counts + d)
+            st = calib_observe(st, jnp.asarray(usage),
+                               jnp.tile(jnp.full(4, base + d), 2), cfg)
+    assert host.group_resolved.tolist() == \
+        np.asarray(st.group_resolved).tolist()
+    assert calib_group_report(st, cfg) == host.group_report()
+    rows = np.asarray([0, 4])
+    all_groups = np.repeat([0, 1], 4)        # device path: per-row map
+    np.testing.assert_allclose(
+        np.asarray(calib_scales(st, cfg, 3.0,
+                                groups=jnp.asarray(all_groups)))[rows],
+        host.scales(rows, groups=all_groups[rows]), rtol=1e-5)
+
+
 # ----------------------------------------------------------------------
 # engine + sweep integration
 # ----------------------------------------------------------------------
