@@ -43,14 +43,9 @@ SPEEDUP_COHORT = 8.0      # acceptance: vmapped cohort vs host, aggregate
 COHORT_SEEDS = 8
 
 
-def _best_of(fn, n: int) -> float:
-    best = float("inf")
-    for _ in range(n):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
-
+# the shared best-of-N timer (repro.obs.timing) — one implementation
+# across every benchmark instead of a copy per file
+from repro.obs.timing import best_of as _best_of  # noqa: E402
 
 GP_COHORT_SEEDS = 4
 

@@ -3,22 +3,12 @@ interpret path + XLA reference; the BlockSpec/VMEM reasoning for the TPU
 target is in EXPERIMENTS.md SS-Roofline)."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
-
-
-def _time(fn, *args, iters: int = 5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+# the shared warmup + avg-of-N kernel timer (repro.obs.timing)
+from repro.obs.timing import time_us as _time
 
 
 def run() -> list[dict]:

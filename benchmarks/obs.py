@@ -1,0 +1,211 @@
+"""Observability-plane benchmark (BENCH_obs.json).
+
+Four cells guard the obs plane's contract (docs/OBSERVABILITY.md):
+
+  * **overhead** — cohort ticks/sec with telemetry rings ON vs the
+    BENCH_engine.json reference (same quick cell: 8-seed vmapped
+    cohort, chunk=32).  Rings ride inside the fused tick, so their cost
+    must stay under 5% (``OVERHEAD_RATIO``); measured with the shared
+    best-of timer and tenancy-style escalating re-measurement so the
+    gate trips on code, not on a noisy runner.
+  * **disabled identity** — obs-off results are bit-identical with the
+    rings compiled out entirely (``SimResults.obs is None``), and
+    obs-ON summaries equal obs-off ones (telemetry never perturbs
+    dynamics).
+  * **ring chunk invariance** — drained histories for chunk=1 and
+    chunk=32 are equal, field by field.
+  * **trace + manifest** — a tiny obs-enabled ``run_grid`` writes a
+    Chrome trace-event JSON that passes ``validate_trace`` and a run
+    manifest whose config hashes round-trip (``load_manifest``
+    re-derives and checks them).  Both files are CI artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.obs.timing import best_of as _best_of
+
+OVERHEAD_RATIO = 0.95     # acceptance: obs-on >= 95% of reference tps
+COHORT_SEEDS = 8          # matches benchmarks.engine's quick cohort
+
+
+def _quick_cfg():
+    """The engine benchmark's quick cell — BENCH_engine.json's
+    ``cohort_ticks_per_s`` is this exact configuration."""
+    from repro.sim.sweep import quick_base_config
+    cfg = quick_base_config(n_apps=32, n_hosts=2, max_components=6)
+    return dataclasses.replace(
+        cfg,
+        cluster=dataclasses.replace(cfg.cluster, max_running_apps=16),
+        policy="pessimistic", forecaster="persist")
+
+
+def _overhead_cell(reps: int, engine_json: str) -> dict:
+    from repro.obs import ObsConfig
+    from repro.sim import generate
+    from repro.sim.step import run_cohort_scan
+
+    cfg = _quick_cfg()
+    chunk = 32
+    seeds = list(range(COHORT_SEEDS))
+    wls = [generate(dataclasses.replace(cfg.workload, seed=s))
+           for s in seeds]
+    on = dataclasses.replace(cfg, obs=ObsConfig(enabled=True))
+
+    # warm-up (compile both programs) + the identity criteria
+    res_off = run_cohort_scan(cfg, seeds, chunk=chunk, wls=wls)
+    res_on = run_cohort_scan(on, seeds, chunk=chunk, wls=wls)
+    assert all(r.obs is None for r in res_off), \
+        "obs-off results must not carry rings"
+    identity = all(a.summary() == b.summary()
+                   for a, b in zip(res_off, res_on))
+    n_ticks = sum(len(r.util_cpu) for r in res_off)
+
+    off_s = _best_of(
+        lambda: run_cohort_scan(cfg, seeds, chunk=chunk, wls=wls), reps)
+    on_s = _best_of(
+        lambda: run_cohort_scan(on, seeds, chunk=chunk, wls=wls), reps)
+    off_tps, on_tps = n_ticks / off_s, n_ticks / on_s
+
+    ref_tps = None
+    if os.path.exists(engine_json):
+        with open(engine_json) as f:
+            ref_tps = json.load(f).get("cohort_ticks_per_s")
+    denom = ref_tps or off_tps
+    ratio = on_tps / denom
+    # noisy shared runners: escalate re-measurement (the best-of floor
+    # only improves) before declaring a miss — same policy as the
+    # tenancy bench's perf gate
+    extra = reps
+    while ratio < OVERHEAD_RATIO and extra <= 8 * reps:
+        on_s = min(on_s, _best_of(
+            lambda: run_cohort_scan(on, seeds, chunk=chunk, wls=wls),
+            extra))
+        on_tps = n_ticks / on_s
+        ratio = on_tps / denom
+        extra *= 2
+    return {
+        "config": {"n_apps": 32, "cohort_seeds": COHORT_SEEDS,
+                   "chunk": chunk, "reps": reps},
+        "n_ticks": n_ticks,
+        "off_ticks_per_s": round(off_tps, 1),
+        "on_ticks_per_s": round(on_tps, 1),
+        "on_overhead": round(off_s / on_s, 3),
+        "engine_ref_ticks_per_s": ref_tps,
+        "on_vs_ref_ratio": round(ratio, 3),
+        "disabled_identity": identity,
+    }
+
+
+def _ring_invariance_cell() -> dict:
+    from repro.obs import ObsConfig
+    from repro.sim import generate
+    from repro.sim.step import run_sim_scan
+
+    cfg = dataclasses.replace(_quick_cfg(), max_ticks=2000,
+                              obs=ObsConfig(enabled=True))
+    wl = generate(cfg.workload)
+    h32 = run_sim_scan(cfg, wl, chunk=32).obs
+    h1 = run_sim_scan(cfg, wl, chunk=1).obs
+    mismatch = [k for k in h32 if not np.array_equal(h32[k], h1[k])]
+    return {
+        "ticks": int(h32["queue"].shape[0]),
+        "fields": len(h32),
+        "mismatched_fields": mismatch,
+        "chunk_invariant": not mismatch,
+    }
+
+
+def _trace_manifest_cell(out_prefix: str) -> dict:
+    from repro.obs import load_manifest, validate_trace
+    from repro.sim.sweep import quick_base_config, run_grid
+
+    sweep_json = f"{out_prefix}.sweep.json"
+    trace_json = f"{out_prefix}.trace.json"
+    manifest_json = f"{out_prefix}.manifest.json"
+    base = quick_base_config(n_apps=24, n_hosts=2, max_components=4)
+    res = run_grid(base, {"policy": ["baseline", "pessimistic"],
+                          "forecaster": ["persist"]},
+                   seeds=range(2), engine="scan", obs=True,
+                   out_path=sweep_json, trace_path=trace_json,
+                   manifest_path=manifest_json, forecast_diag=False)
+    with open(trace_json) as f:
+        problems = validate_trace(json.load(f))
+    try:
+        man = load_manifest(manifest_json, verify=True)
+        roundtrip, man_err = True, None
+    except (ValueError, KeyError) as e:
+        man, roundtrip, man_err = None, False, str(e)
+    obs_cells = sum(1 for c in res.cells if "obs" in c)
+    return {
+        "cells": len(res.cells),
+        "cells_with_obs": obs_cells,
+        "trace_problems": problems,
+        "trace_valid": not problems,
+        "manifest_roundtrip": roundtrip,
+        "manifest_error": man_err,
+        "manifest_cells": len(man["cells"]) if man else 0,
+        "artifacts": {"sweep": sweep_json, "trace": trace_json,
+                      "manifest": manifest_json},
+    }
+
+
+def run(out: str = "BENCH_obs.json", reps: int = 20,
+        engine_json: str = "BENCH_engine.json") -> dict:
+    # perf first (same reasoning as the tenancy bench: the timed
+    # programs are small, keep them ahead of the big grid compilations)
+    overhead = _overhead_cell(reps, engine_json)
+    invariance = _ring_invariance_cell()
+    prefix = out[:-5] if out.endswith(".json") else out
+    tm = _trace_manifest_cell(prefix)
+    result = {
+        "schema": 1,
+        "overhead": overhead,
+        "ring_invariance": invariance,
+        "trace_manifest": tm,
+        "criteria": {
+            "disabled_identity": overhead["disabled_identity"],
+            "ring_chunk_invariant": invariance["chunk_invariant"],
+            "enabled_overhead_lt_5pct":
+                overhead["on_vs_ref_ratio"] >= OVERHEAD_RATIO,
+            "trace_valid": tm["trace_valid"],
+            "manifest_roundtrip": tm["manifest_roundtrip"],
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1, sort_keys=True)
+    print(f"overhead: on {overhead['on_ticks_per_s']:.0f} ticks/s vs "
+          f"ref {overhead['engine_ref_ticks_per_s'] or overhead['off_ticks_per_s']:.0f} "
+          f"(x{overhead['on_vs_ref_ratio']}, overhead "
+          f"{overhead['on_overhead']}x)")
+    print(f"rings: {invariance['ticks']} ticks x "
+          f"{invariance['fields']} fields, chunk-invariant="
+          f"{invariance['chunk_invariant']}")
+    print(f"trace/manifest: {tm['cells']} cells, trace_valid="
+          f"{tm['trace_valid']}, roundtrip={tm['manifest_roundtrip']}")
+    print(f"criteria: {result['criteria']}")
+    return result
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.obs",
+        description="Observability-plane benchmark: ring overhead + "
+                    "identity, trace/manifest validity.")
+    ap.add_argument("--out", default="BENCH_obs.json")
+    ap.add_argument("--reps", type=int, default=20)
+    ap.add_argument("--engine-json", default="BENCH_engine.json",
+                    help="engine benchmark artifact for the cohort "
+                         "ticks/sec reference (absent = fresh obs-off "
+                         "baseline)")
+    args = ap.parse_args(argv)
+    return run(out=args.out, reps=args.reps, engine_json=args.engine_json)
+
+
+if __name__ == "__main__":
+    main()

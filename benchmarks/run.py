@@ -17,6 +17,9 @@
          BENCH_shard.json (run it standalone or first: forced host
          devices must be configured before jax initializes)
   kernels  Pallas kernel microbenches
+  obs    observability plane: telemetry-ring overhead + identity, trace
+         and manifest validity; writes BENCH_obs.json (+ .trace.json /
+         .manifest.json artifacts)
   roofline dry-run-derived roofline table (if dryrun_results.json exists)
 
 ``python -m benchmarks.run [--only SECTION] [--full]``
@@ -35,7 +38,7 @@ import time
 import traceback
 
 SECTIONS = ("fig2", "fig3", "fig4", "fig5", "scenarios", "calibration",
-            "engine", "shard", "kernels", "roofline")
+            "engine", "shard", "kernels", "obs", "roofline")
 
 
 def main() -> None:
@@ -83,6 +86,9 @@ def main() -> None:
             elif sec == "kernels":
                 from benchmarks import kernels
                 kernels.main(quick)
+            elif sec == "obs":
+                from benchmarks import obs
+                obs.run()
             elif sec == "roofline":
                 if os.path.exists("dryrun_results.json"):
                     from benchmarks import roofline

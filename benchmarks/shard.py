@@ -39,7 +39,7 @@ import dataclasses
 import json
 import time
 
-from benchmarks.engine import _best_of
+from repro.obs.timing import best_of as _best_of
 
 SPEEDUP_FLEET = 2.0       # acceptance: shard vs scan cohort, mesh >= 4
 FLEET_SEEDS = 32

@@ -34,7 +34,6 @@ import argparse
 import dataclasses
 import json
 import os
-import time
 
 JAIN_WDRF = 0.9           # acceptance: gated fairness floor
 JAIN_UNGATED = 0.8        # acceptance: ungated stays visibly unfair
@@ -42,13 +41,8 @@ COVERAGE_TOL = 0.03       # acceptance: per-tenant coverage band
 PERF_RATIO = 0.9          # acceptance: tenancy-off tps vs BENCH_engine
 
 
-def _best_of(fn, n: int) -> float:
-    best = float("inf")
-    for _ in range(n):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
+# the shared best-of-N timer (repro.obs.timing)
+from repro.obs.timing import best_of as _best_of  # noqa: E402
 
 
 def _fairness_cell(chunk: int = 64) -> dict:

@@ -48,3 +48,12 @@ def control_init(cfg: TenancyConfig, batch: int | None = None) -> TenantState:
 def device_weights(cfg: TenancyConfig) -> Array:
     """The resolved wDRF weights as a device constant."""
     return jnp.asarray(resolve_weights(cfg))
+
+
+def credit_mean(credit: Array, active: Array) -> Array:
+    """Mean credit over ACTIVE tenants (the telemetry ring's ``credit``
+    series — ``repro.obs.rings``): inactive tenants sit at the init
+    value forever and would wash the signal out of a plain mean."""
+    n = active.sum()
+    return jnp.where(n > 0,
+                     (credit * active).sum() / jnp.maximum(n, 1), 0.0)

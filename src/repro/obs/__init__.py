@@ -1,0 +1,37 @@
+"""repro.obs — the observability plane.
+
+Spans device and host:
+
+  * :mod:`repro.obs.rings` — device-side per-tick telemetry rings
+    (``ObsState``, structurally absent when disabled) drained at chunk
+    boundaries by the scan/shard engines;
+  * :mod:`repro.obs.trace` — host span tracing to Chrome trace-event /
+    Perfetto JSON for sweep-driver phases;
+  * :mod:`repro.obs.metrics` — process metrics registry (counters /
+    gauges / histograms) with JSONL + Prometheus-textfile export;
+  * :mod:`repro.obs.timing` — the shared benchmark timers;
+  * :mod:`repro.obs.manifest` — run manifests with round-trippable
+    config hashes;
+  * :mod:`repro.obs.report` — ring-history and forecast-rows summaries.
+
+Import-light on purpose: nothing here imports ``repro.sim`` (the sim
+imports us), and jax is only touched lazily where a device is involved.
+"""
+from repro.obs.config import ObsConfig
+from repro.obs.manifest import (build_manifest, cell_hash, config_hash,
+                                load_manifest, write_manifest)
+from repro.obs.metrics import REGISTRY, MetricsRegistry
+from repro.obs.report import masked_row_overhead, obs_summary
+from repro.obs.timing import best_of, time_us
+from repro.obs.trace import (Tracer, current_tracer, span, tracing,
+                             validate_trace)
+
+__all__ = [
+    "ObsConfig",
+    "REGISTRY", "MetricsRegistry",
+    "Tracer", "span", "tracing", "current_tracer", "validate_trace",
+    "best_of", "time_us",
+    "config_hash", "cell_hash", "build_manifest", "write_manifest",
+    "load_manifest",
+    "masked_row_overhead", "obs_summary",
+]

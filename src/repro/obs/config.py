@@ -1,0 +1,27 @@
+"""Observability configuration (the ``SimConfig.obs`` field).
+
+Frozen and hashable like every other config block: the scan engine's
+compile cache keys on it (``repro.sim.step._cfg_key``), and the sweep
+dedups traces/diagnostics by config identity.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Device-side telemetry rings (``repro.obs.rings``).
+
+    Disabled by default: the ``ObsState`` pytree is then structurally
+    ABSENT from the traced program (exactly like ``TenantState`` /
+    ``CalibState``), so obs-off runs are bit-identical to engines that
+    predate the observability plane.
+    """
+
+    enabled: bool = False
+    # ring capacity in ticks; the chunk drivers drain the rings at every
+    # chunk boundary, so capacity must be >= the chunk size (enforced by
+    # repro.sim.step._drive_chunks) or undrained entries would be
+    # overwritten
+    ring: int = 128

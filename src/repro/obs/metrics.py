@@ -1,0 +1,157 @@
+"""Process-wide metrics registry: counters / gauges / histograms with
+JSONL and Prometheus-textfile export.
+
+Deliberately tiny (stdlib only, no client-library dependency): the
+point is ONE place where driver-level telemetry accumulates — compile
+times, chunk walls, benchmark timer samples — so manifests and bench
+artifacts can snapshot it instead of every module keeping ad-hoc
+stopwatch variables.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+import threading
+import time
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "REGISTRY", "registry"]
+
+
+class Counter:
+    """Monotone event count."""
+
+    kind = "counter"
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        if v < 0:
+            raise ValueError("counters only go up")
+        self.value += v
+
+    def snapshot(self) -> dict:
+        return {"type": self.kind, "value": self.value}
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    kind = "gauge"
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def snapshot(self) -> dict:
+        return {"type": self.kind, "value": self.value}
+
+
+class Histogram:
+    """Streaming count / sum / min / max summary (no buckets: the
+    exporters emit ``_count`` / ``_sum`` / ``_min`` / ``_max`` series,
+    which is what the bench criteria and manifests actually consume)."""
+
+    kind = "histogram"
+
+    def __init__(self):
+        self.count = 0
+        self.total = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.total += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+
+    def snapshot(self) -> dict:
+        return {"type": self.kind, "count": self.count, "sum": self.total,
+                "min": (None if self.count == 0 else self.min),
+                "max": (None if self.count == 0 else self.max)}
+
+
+class MetricsRegistry:
+    """Thread-safe name -> metric map (get-or-create per kind)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: dict[str, Counter | Gauge | Histogram] = {}
+
+    def _get(self, name: str, cls):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = cls()
+            elif not isinstance(m, cls):
+                raise TypeError(f"metric {name!r} is a {m.kind}, not a "
+                                f"{cls.kind}")
+            return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {name: m.snapshot()
+                    for name, m in sorted(self._metrics.items())}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._metrics.clear()
+
+    # -- exporters -----------------------------------------------------
+    def write_jsonl(self, path: str, **extra) -> None:
+        """Append one timestamped snapshot line (metrics-over-time logs:
+        each sweep / bench run appends, nothing is overwritten)."""
+        rec = {"ts": time.time(), "metrics": self.snapshot(), **extra}
+        with open(path, "a") as f:
+            f.write(json.dumps(rec, sort_keys=True) + "\n")
+
+    def write_textfile(self, path: str) -> None:
+        """Prometheus textfile-collector exposition format (one flat
+        sample per series; histograms expand to _count/_sum/_min/_max)."""
+        lines = []
+        for name, snap in self.snapshot().items():
+            pname = _prom_name(name)
+            if snap["type"] == "histogram":
+                lines.append(f"# TYPE {pname} summary")
+                lines.append(f"{pname}_count {snap['count']}")
+                lines.append(f"{pname}_sum {_prom_val(snap['sum'])}")
+                for k in ("min", "max"):
+                    if snap[k] is not None:
+                        lines.append(f"{pname}_{k} {_prom_val(snap[k])}")
+            else:
+                lines.append(f"# TYPE {pname} {snap['type']}")
+                lines.append(f"{pname} {_prom_val(snap['value'])}")
+        with open(path, "w") as f:
+            f.write("\n".join(lines) + "\n")
+
+
+def _prom_name(name: str) -> str:
+    out = re.sub(r"[^a-zA-Z0-9_:]", "_", name)
+    return out if re.match(r"^[a-zA-Z_:]", out) else "_" + out
+
+
+def _prom_val(v: float) -> str:
+    return repr(float(v))
+
+
+# the process-wide default registry (what the engines / benches use)
+REGISTRY = MetricsRegistry()
+
+
+def registry() -> MetricsRegistry:
+    return REGISTRY

@@ -1,0 +1,44 @@
+"""Telemetry reports: turn drained rings / collected counters into the
+compact summaries that sweep cells, manifests, and BENCH artifacts carry.
+"""
+from __future__ import annotations
+
+__all__ = ["masked_row_overhead", "obs_summary"]
+
+
+def masked_row_overhead(rows: dict) -> float:
+    """Padded-vs-compact forecast cost ratio from ``forecast_rows``
+    telemetry: the batch rows a padded forecaster evaluates across the
+    ticks that actually invoked the model, over the rows that were
+    genuinely ready.  >1 means masked rows are being paid for; the
+    BENCH_engine ``gp`` block reports this as ``masked_row_overhead``
+    (~6.7x on the tiny GP cell — ROADMAP item 3's ragged-batch target).
+    """
+    return (rows["rows_batch"] * rows["ticks_forecasting"]
+            / max(rows["rows_ready"], 1))
+
+
+def obs_summary(history: dict) -> dict:
+    """Collapse one member's drained ring history (``SimResults.obs``)
+    into scalar telemetry for sweep-cell records and manifests.
+
+    Event rings (oom/fail/preempt/admitted/throttled/cov_*) are per-tick
+    deltas, so their SUM is the run total; level rings (used/queue/gap/
+    credit) report means and peaks.
+    """
+    t = int(history["queue"].shape[0]) if history else 0
+    if t == 0:
+        return {"ticks": 0}
+    out = {"ticks": t}
+    for name in ("oom", "fail", "preempt", "admitted", "throttled",
+                 "cov_resolved", "cov_errors"):
+        out[f"{name}_total"] = int(history[name].sum())
+    for name in ("used_cpu", "used_mem", "gap_cpu", "gap_mem", "credit"):
+        out[f"{name}_mean"] = float(history[name].mean())
+    out["queue_mean"] = float(history["queue"].mean())
+    out["queue_peak"] = int(history["queue"].max())
+    out["gap_cpu_peak"] = float(history["gap_cpu"].max(initial=0.0))
+    res = out["cov_resolved_total"]
+    if res:
+        out["coverage"] = round(1.0 - out["cov_errors_total"] / res, 4)
+    return out

@@ -1,0 +1,150 @@
+"""Device-side telemetry rings: per-tick time series inside the fused step.
+
+The scan/shard engines used to emit END-OF-RUN scalars only (counters
+plus the ``TickMetrics`` usage sums).  ``ObsState`` adds circular
+per-tick rings — queue depth, shaped-vs-actual demand gap, OOM /
+admission / gate / credit events, conformal coverage deltas — written
+by ``repro.sim.step.fused_tick`` and drained by the host at chunk
+boundaries (:class:`RingDrain`), so a run yields full histories.
+
+Two invariants, inherited from ``TickMetrics``:
+
+  * STRUCTURAL ABSENCE — ``SimState.obs`` is ``None`` when
+    ``SimConfig.obs.enabled`` is off, so disabled programs are
+    bit-identical to pre-observability engines (same convention as
+    ``TenantState`` / ``CalibState``);
+  * CHUNK INVARIANCE — rings record raw per-tick sums and event DELTAS,
+    never ratios (XLA may rewrite loop-invariant divisions depending on
+    unroll; the sums are chunk-stable), and writes are gated on the
+    same ``active`` mask as ``TickMetrics.valid``, so drained histories
+    are identical for chunk=1 and chunk=32.
+
+Layout: the fields are PACKED into one f32 and one i32 matrix of shape
+``(F, R)`` rather than one array per field — the tick then pays two
+one-hot masked writes and two stacks instead of thirteen, and the
+state adds three leaves instead of fourteen (leaf count is what eager
+per-member slicing and init dispatch scale with).  The packing is an
+implementation detail: :meth:`RingDrain.history` still returns a
+``field name -> (T,)`` mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.config import ObsConfig
+
+Array = jax.Array
+
+# ring fields: (name, dtype).  All raw sums / deltas — see module doc.
+RING_FIELDS = (
+    ("used_cpu", jnp.float32),      # cluster-total instantaneous usage
+    ("used_mem", jnp.float32),
+    ("queue", jnp.int32),           # apps waiting in the FIFO queue
+    ("gap_cpu", jnp.float32),       # shaped-demand sum - usage sum
+    ("gap_mem", jnp.float32),       # (0 under the baseline policy)
+    ("oom", jnp.int32),             # OOM kills this tick
+    ("fail", jnp.int32),            # uncontrolled failure events
+    ("preempt", jnp.int32),         # full + partial preemptions
+    ("admitted", jnp.int32),        # apps admitted from the queue
+    ("throttled", jnp.int32),       # gate-held queued app-ticks (tenancy)
+    ("credit", jnp.float32),        # mean credit of active tenants
+    ("cov_resolved", jnp.int32),    # conformal predictions resolved
+    ("cov_errors", jnp.int32),      # ... of which miscovered
+)
+
+F32_NAMES = tuple(n for n, dt in RING_FIELDS if dt == jnp.float32)
+I32_NAMES = tuple(n for n, dt in RING_FIELDS if dt == jnp.int32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ObsState:
+    """Per-run telemetry rings (``(B, ...)``-leading under a cohort
+    vmap).  ``cursor`` counts total ticks recorded (monotone); tick
+    ``k`` lives at ring column ``k % R`` until drained."""
+
+    cursor: Array   # () i32
+    f32: Array      # (len(F32_NAMES), R) f32, rows in F32_NAMES order
+    i32: Array      # (len(I32_NAMES), R) i32, rows in I32_NAMES order
+
+
+def obs_init(cfg: ObsConfig, batch: int | None = None) -> ObsState:
+    """Fresh rings (optionally with a leading cohort axis)."""
+    B = () if batch is None else (batch,)
+    R = int(cfg.ring)
+    return ObsState(
+        cursor=jnp.zeros(B, jnp.int32),
+        f32=jnp.zeros(B + (len(F32_NAMES), R), jnp.float32),
+        i32=jnp.zeros(B + (len(I32_NAMES), R), jnp.int32))
+
+
+def obs_record(obs: ObsState, active: Array, values: dict) -> ObsState:
+    """Write one tick's values at ``cursor % R`` (one-hot masked update —
+    no scatter: XLA CPU serializes scatters under vmap).  Gated on
+    ``active`` exactly like ``TickMetrics.valid``, so padding ticks
+    after global completion record nothing."""
+    R = obs.f32.shape[-1]
+    oh = (jnp.arange(R) == obs.cursor % R) & active
+    vf = jnp.stack([jnp.asarray(values[n], jnp.float32)
+                    for n in F32_NAMES])
+    vi = jnp.stack([jnp.asarray(values[n], jnp.int32)
+                    for n in I32_NAMES])
+    return ObsState(
+        cursor=obs.cursor + active.astype(jnp.int32),
+        f32=jnp.where(oh, vf[:, None], obs.f32),
+        i32=jnp.where(oh, vi[:, None], obs.i32))
+
+
+class RingDrain:
+    """Host-side accumulator: chunk-boundary ``ObsState`` snapshots ->
+    contiguous per-tick histories.
+
+    Tracks a drained-count per cohort member (members finish at
+    different ticks, so cursors diverge) and unrolls the modular ring
+    indexing.  The chunk drivers guarantee ``chunk <= ring capacity``,
+    so no undrained entry is ever overwritten; a violation raises."""
+
+    def __init__(self):
+        self._drained: np.ndarray | None = None
+        self._parts: list[dict] | None = None
+
+    def drain(self, obs: ObsState) -> None:
+        h = jax.device_get(obs)      # sharded states gather here (small)
+        cur = np.asarray(h.cursor, np.int64).reshape(-1)
+        R = np.asarray(h.f32).shape[-1]
+        f32 = np.asarray(h.f32).reshape(-1, len(F32_NAMES), R)
+        i32 = np.asarray(h.i32).reshape(-1, len(I32_NAMES), R)
+        if self._parts is None:
+            self._drained = np.zeros_like(cur)
+            self._parts = [{name: [] for name, _ in RING_FIELDS}
+                           for _ in range(cur.size)]
+        for m in range(cur.size):
+            n = int(cur[m] - self._drained[m])
+            if n == 0:
+                continue
+            if n > R:
+                raise RuntimeError(
+                    f"obs ring overflow: {n} ticks written since the "
+                    f"last drain exceeds capacity {R} (keep chunk <= "
+                    "SimConfig.obs.ring)")
+            idx = (self._drained[m] + np.arange(n)) % R
+            for j, name in enumerate(F32_NAMES):
+                self._parts[m][name].append(f32[m, j, idx])
+            for j, name in enumerate(I32_NAMES):
+                self._parts[m][name].append(i32[m, j, idx])
+        self._drained = cur.copy()
+
+    def history(self, member: int = 0) -> dict:
+        """``field -> (T,) array`` of per-tick values for one member
+        (T = the member's executed tick count)."""
+        if self._parts is None:
+            return {name: np.zeros((0,), np.dtype(dt))
+                    for name, dt in RING_FIELDS}
+        p = self._parts[member]
+        return {name: (np.concatenate(p[name]) if p[name]
+                       else np.zeros((0,), np.dtype(dt)))
+                for name, dt in RING_FIELDS}

@@ -1,0 +1,52 @@
+"""Shared benchmark timers.
+
+Every benchmark used to carry its own copy of a best-of-N
+``time.perf_counter()`` loop (engine / shard / tenancy) or an
+average-of-N blocking loop (kernels).  These are THE implementations
+now; samples are mirrored into the process :data:`repro.obs.metrics.REGISTRY`
+so manifests and bench artifacts can snapshot what was measured.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.obs.metrics import REGISTRY
+
+__all__ = ["best_of", "time_us"]
+
+
+def best_of(fn, n: int, metric: str | None = None) -> float:
+    """Min wall-clock seconds of ``fn()`` over ``n`` runs (the classic
+    noise-robust estimator: min is the run with the least interference).
+
+    ``metric`` names a :class:`~repro.obs.metrics.Histogram` that
+    receives every individual sample (not just the min)."""
+    hist = REGISTRY.histogram(metric) if metric else None
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        dt = time.perf_counter() - t0
+        if hist is not None:
+            hist.observe(dt)
+        best = min(best, dt)
+    return best
+
+
+def time_us(fn, *args, iters: int = 5, metric: str | None = None) -> float:
+    """Average microseconds per call of a jax computation: one warmup
+    call (blocked), then ``iters`` back-to-back calls with a single
+    trailing ``block_until_ready`` — the kernel-microbench convention."""
+    import jax  # lazy: repro.obs stays importable without a backend
+
+    out = fn(*args)
+    out[0].block_until_ready() if isinstance(out, tuple) else \
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    if metric:
+        REGISTRY.histogram(metric).observe(us)
+    return us

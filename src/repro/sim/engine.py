@@ -61,6 +61,7 @@ from repro.core.shaper import (POLICIES, SafeguardConfig, ShapeProblem,
 from repro.core.uncertainty import (CalibrationConfig, OnlineCalibrator,
                                     bucket_pow2, sigma_from_var_np)
 from repro.control import HostControl, TenancyConfig, tenancy_summary
+from repro.obs import ObsConfig
 from repro.sim.cluster import CPU, MEM, Cluster, ClusterConfig
 from repro.sim.metrics import SimResults
 from repro.sim.scenarios.registry import build_trace
@@ -83,6 +84,11 @@ class SimConfig:
     # tenancy-off path is bit-identical to the pre-control-plane
     # engines; see repro.control)
     control: TenancyConfig = TenancyConfig()
+    # device-side telemetry rings (disabled by default — SimState.obs is
+    # then structurally absent and obs-off programs are bit-identical to
+    # pre-observability engines; scan/shard only, the host engines
+    # ignore it like forecast_rows; see repro.obs)
+    obs: ObsConfig = ObsConfig()
     window: int = 24                     # monitor window (ticks)
     grace: int = 10                      # grace period (paper §5: 10 min)
     horizon: int = 3                     # forecast look-ahead (ticks)

@@ -81,6 +81,11 @@ class SimResults:
     # SimConfig.control is enabled — tenancy-off summaries (and the
     # engine-equivalence contracts) are unchanged.
     tenancy: dict | None = None
+    # drained per-tick telemetry rings (repro.obs.rings): field -> (T,)
+    # arrays, filled by the scan/shard engines only when SimConfig.obs
+    # is enabled.  Like forecast_rows, NOT part of summary() — telemetry
+    # must never perturb the engine-equivalence contracts.
+    obs: dict | None = None
 
     def record_completion(self, gid: int, submit: float, t: float) -> None:
         self.turnaround[int(gid)] = float(t - submit)

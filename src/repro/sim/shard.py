@@ -33,6 +33,7 @@ from typing import Sequence
 import jax
 import numpy as np
 
+from repro.obs import span
 from repro.sim.step import FLEET_AXIS, run_fleet_shard, run_sim_scan
 
 __all__ = ["fleet_mesh", "device_count", "group_fleets",
@@ -93,16 +94,18 @@ def run_shard_records(grid: Sequence, workloads: dict, record, *,
     for fleet in fleets:
         base_cfg = fleet[0].cfg
         t0 = time.time()
-        if len(fleet) == 1:
-            # singleton static config: solo scan run (see module doc)
-            results = [run_sim_scan(base_cfg,
-                                    workloads[base_cfg.workload],
-                                    chunk=chunk)]
-        else:
-            results = run_fleet_shard(
-                base_cfg, cfgs=[c.cfg for c in fleet],
-                wls=[workloads[c.cfg.workload] for c in fleet],
-                chunk=chunk, mesh=mesh)
+        with span(f"fleet:{fleet[0].name}", cat="fleet",
+                  args={"members": len(fleet)}):
+            if len(fleet) == 1:
+                # singleton static config: solo scan run (see module doc)
+                results = [run_sim_scan(base_cfg,
+                                        workloads[base_cfg.workload],
+                                        chunk=chunk)]
+            else:
+                results = run_fleet_shard(
+                    base_cfg, cfgs=[c.cfg for c in fleet],
+                    wls=[workloads[c.cfg.workload] for c in fleet],
+                    chunk=chunk, mesh=mesh)
         wall = (time.time() - t0) / len(fleet)
         if log is not None:
             log(f"fleet[{len(fleet)} cells] {fleet[0].name} "

@@ -39,6 +39,7 @@ import numpy as np
 from repro.control import TenantState, control_init, tenancy_summary
 from repro.core.uncertainty.online import (CalibState, calib_group_report,
                                            calib_init, calib_report)
+from repro.obs.rings import ObsState, obs_init
 from repro.sim.metrics import SimResults
 
 Array = jax.Array
@@ -155,6 +156,10 @@ class SimState:
     # static-presence convention, so tenancy-off programs are
     # structurally identical to pre-control-plane ones)
     tenancy: TenantState | None
+    # per-tick telemetry rings (None when observability is off — same
+    # static-presence convention again: obs-off programs are
+    # bit-identical to pre-observability engines)
+    obs: ObsState | None
 
 
 def init_state(cfg, n_apps: int, max_components: int,
@@ -180,6 +185,7 @@ def init_state(cfg, n_apps: int, max_components: int,
         calib = calib_init(2 * A * C, cfg.calibration, batch=batch,
                            n_groups=(cfg.control.max_tenants
                                      if cfg.control.enabled else 0))
+    obs = obs_init(cfg.obs, batch=batch) if cfg.obs.enabled else None
     return SimState(
         slot_gid=jnp.full(B + (A,), -1, jnp.int32),
         work_done=zf(A), comp_running=zb(A, C), comp_host=zi(A, C),
@@ -189,7 +195,7 @@ def init_state(cfg, n_apps: int, max_components: int,
         finish_t=zf(N), saved_work=zf(N), has_saved=zb(N),
         t=zf(),
         failure_events=zi(), oom_kills=zi(), full_preemptions=zi(),
-        partial_preemptions=zi(), calib=calib, tenancy=tenancy)
+        partial_preemptions=zi(), calib=calib, tenancy=tenancy, obs=obs)
 
 
 @jax.tree_util.register_dataclass
@@ -218,10 +224,15 @@ class TickMetrics:
     forecast_rows: Array  # () i32
 
 
-def drain_results(cfg, wl, state: SimState,
-                  metrics: TickMetrics) -> SimResults:
+def drain_results(cfg, wl, state: SimState, metrics: TickMetrics,
+                  obs: dict | None = None) -> SimResults:
     """Fold final device state + stacked per-tick metrics (leading axis
-    = ticks, already concatenated across chunks) into ``SimResults``."""
+    = ticks, already concatenated across chunks) into ``SimResults``.
+
+    ``obs`` is one member's drained ring history (``field -> (T,)``)
+    from :class:`repro.obs.rings.RingDrain` — attached verbatim to
+    ``SimResults.obs`` (and, like ``forecast_rows``, excluded from
+    ``summary()`` so telemetry can never perturb equivalence checks)."""
     res = SimResults(n_apps=int(wl.n_apps))
     valid = np.asarray(metrics.valid)
     res.n_running = [int(v) for v in np.asarray(metrics.n_running)[valid]]
@@ -259,6 +270,8 @@ def drain_results(cfg, wl, state: SimState,
             "ticks_forecasting": int((rows > 0).sum()),
             "ticks": int(valid.sum()),
         }
+    if obs is not None:
+        res.obs = obs
     res.failure_events = int(state.failure_events)
     res.oom_kills = int(state.oom_kills)
     res.full_preemptions = int(state.full_preemptions)

@@ -45,13 +45,14 @@ sweep-level executor that groups grid cells into fleets lives in
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.control.credit import credit_quantile, credit_step
-from repro.control.device import device_weights
+from repro.control.device import credit_mean, device_weights
 from repro.control.fairness import dominant_shares, gate_mask
 from repro.core.forecast.base import peak_over_horizon, persistence_peak
 from repro.core.shaper import RAW_POLICIES, ShapeProblem
@@ -59,6 +60,8 @@ from repro.core.shaper.safeguard import (shaped_demand_raw,
                                          shaped_demand_scaled_raw)
 from repro.core.uncertainty.online import (calib_begin, calib_observe,
                                            calib_scales)
+from repro.obs import REGISTRY, span
+from repro.obs.rings import RingDrain, obs_record
 from repro.sim.metrics import SimResults
 from repro.sim.state import (CPU, MEM, DeviceTrace, SimState, TickMetrics,
                              drain_results, init_state, round_up)
@@ -662,6 +665,20 @@ def fused_tick(cfg, model, tr: DeviceTrace,
     t_prev = st.t
     t = st.t + jnp.float32(tick)
 
+    # telemetry rings (repro.obs): static pytree-structure branch like
+    # `ctl` below.  Entry-of-tick counter snapshots turn the cumulative
+    # counters into per-tick DELTAS — raw sums only, never ratios, so
+    # the rings stay chunk-invariant (see ObsState docstring).
+    rec = st.obs is not None
+    if rec:
+        oom0, fail0 = st.oom_kills, st.failure_events
+        pre0 = st.full_preemptions + st.partial_preemptions
+        cres0 = st.calib.resolved if st.calib is not None else None
+        cerr0 = st.calib.errors if st.calib is not None else None
+        obs_dem = None                       # shaped-demand sums, (2,)
+        obs_throttled = jnp.int32(0)
+        obs_credit = jnp.float32(0.0)
+
     # 1. arrivals
     new = ~st.arrived & (tr.submit <= t)
     st = dataclasses.replace(st, arrived=st.arrived | new,
@@ -711,6 +728,8 @@ def fused_tick(cfg, model, tr: DeviceTrace,
     fc_rows = jnp.int32(0)
     if cfg.policy != "baseline":
         demand, st, fc_rows = _shaped_demands(cfg, model, tr, st, tick)
+        if rec:
+            obs_dem = demand.sum((0, 1))     # (2,) shaped-demand totals
         prob = _shape_problem(cfg, tr, st, demand, t, host_cap)
         dec = RAW_POLICIES[cfg.policy](prob)
         st, usage, conflict, resets4 = _apply_decision(
@@ -767,6 +786,10 @@ def fused_tick(cfg, model, tr: DeviceTrace,
             active_ticks=ten.active_ticks + active_t.astype(jnp.int32)))
         elig_app = elig_t[jnp.clip(tr.tenant, 0, Tn - 1)]
         q6 = st.queued
+        if rec:
+            obs_throttled = jnp.where(elig_t, 0, queued_t).sum()
+            obs_credit = credit_mean(credit, active_t)
+    q_admit = st.queued
     st, resets6 = _admit_queued(cfg, tr, st, t, host_cap, elig_app)
     if ctl:
         st = dataclasses.replace(st, tenancy=dataclasses.replace(
@@ -784,6 +807,28 @@ def fused_tick(cfg, model, tr: DeviceTrace,
         used_cpu=used[CPU], used_mem=used[MEM],
         alloc_cpu=alloc[CPU], alloc_mem=alloc[MEM],
         forecast_rows=fc_rows)
+
+    if rec:
+        zero = jnp.int32(0)
+        st = dataclasses.replace(st, obs=obs_record(st.obs, active, {
+            "used_cpu": used[CPU], "used_mem": used[MEM],
+            "queue": st.queued.sum().astype(jnp.int32),
+            "gap_cpu": (obs_dem[CPU] - used[CPU]
+                        if obs_dem is not None else jnp.float32(0.0)),
+            "gap_mem": (obs_dem[MEM] - used[MEM]
+                        if obs_dem is not None else jnp.float32(0.0)),
+            "oom": st.oom_kills - oom0,
+            "fail": st.failure_events - fail0,
+            "preempt": (st.full_preemptions + st.partial_preemptions
+                        - pre0),
+            "admitted": (q_admit & ~st.queued).sum().astype(jnp.int32),
+            "throttled": obs_throttled,
+            "credit": obs_credit,
+            "cov_resolved": (st.calib.resolved - cres0
+                             if cres0 is not None else zero),
+            "cov_errors": (st.calib.errors - cerr0
+                           if cerr0 is not None else zero),
+        }))
 
     st = dataclasses.replace(st, t=jnp.where(active, t, t_prev))
     return st, metrics
@@ -803,7 +848,7 @@ def _cfg_key(cfg):
     (NOT the workload config — shapes are keyed separately, so sweep
     cells across scenarios share compilations)."""
     return (cfg.cluster, cfg.policy, cfg.forecaster, cfg.safeguard,
-            cfg.calibration, cfg.control, cfg.window, cfg.grace,
+            cfg.calibration, cfg.control, cfg.obs, cfg.window, cfg.grace,
             cfg.horizon, cfg.gp, cfg.arima, cfg.work_lost_on_kill)
 
 
@@ -842,6 +887,27 @@ def _device_trace(wls, batched: bool, *, pad_to: int | None = None,
     return tr
 
 
+def _timed_first_call(fn, metric: str):
+    """Wrap a fresh jitted chunk fn so its FIRST call — which traces and
+    compiles synchronously before dispatching — is measured: the wall
+    feeds a ``repro.obs`` histogram (manifests snapshot it) and a
+    ``jit_compile`` trace span.  Later calls pass straight through."""
+    holder = {"first": True}
+
+    def wrapped(*args):
+        if holder["first"]:
+            holder["first"] = False
+            with span("jit_compile", cat="compile",
+                      args={"metric": metric}):
+                t0 = time.perf_counter()
+                out = fn(*args)
+            REGISTRY.histogram(metric).observe(time.perf_counter() - t0)
+            return out
+        return fn(*args)
+
+    return wrapped
+
+
 def _chunk_fn(cfg, chunk: int, shapes, cohort: bool):
     key = (_cfg_key(cfg), chunk, shapes, cohort)
     fn = _CHUNK_CACHE.get(key)
@@ -855,7 +921,8 @@ def _chunk_fn(cfg, chunk: int, shapes, cohort: bool):
 
         if cohort:
             run_chunk = jax.vmap(run_chunk)
-        fn = _CHUNK_CACHE[key] = jax.jit(run_chunk, donate_argnums=(1,))
+        fn = _CHUNK_CACHE[key] = _timed_first_call(
+            jax.jit(run_chunk, donate_argnums=(1,)), "scan.compile_s")
     return fn
 
 
@@ -879,20 +946,37 @@ def _drive_chunks(cfg, chunk: int, fn_for_size, tr, st):
     by slicing the LAST chunk to exactly the remaining ticks (one extra
     compile at most): the step itself gates only on completion, so a
     truncated sim must never execute a tick past ``max_ticks``.
+
+    When telemetry rings are present the host drains them at every
+    chunk boundary (returned ``RingDrain``; ``None`` when obs is off),
+    which is why ring capacity must cover a whole chunk.
     """
+    drain = None
+    if st.obs is not None:
+        if chunk > cfg.obs.ring:
+            raise ValueError(
+                f"chunk={chunk} exceeds the telemetry ring capacity "
+                f"{cfg.obs.ring}: rings are drained once per chunk, so "
+                "undrained ticks would be overwritten (raise "
+                "SimConfig.obs.ring or shrink the chunk)")
+        drain = RingDrain()
     parts = []
     remaining = cfg.max_ticks
     while remaining > 0:
         size = min(chunk, remaining)
         fn = fn_for_size(size)
-        st, ms = fn(tr, st)
+        with span("chunk", cat="execute", args={"ticks": size}):
+            st, ms = fn(tr, st)
         parts.append(ms)
         remaining -= size
+        if drain is not None:
+            with span("ring_drain", cat="drain"):
+                drain.drain(st.obs)
         # np.asarray, not st.done.all(): the fleet state is sharded
         # across devices and the host-side gather is the cheap form
         if bool(np.asarray(st.done).all()):
             break
-    return st, parts
+    return st, parts, drain
 
 
 def run_sim_scan(cfg, wl=None, *, chunk: int = 32) -> SimResults:
@@ -908,10 +992,12 @@ def run_sim_scan(cfg, wl=None, *, chunk: int = 32) -> SimResults:
     tr = _device_trace([wl], batched=False)
     st = init_state(cfg, wl.n_apps, wl.max_components)
     shapes = _shapes_key(wl, cfg)
-    st, parts = _drive_chunks(
+    st, parts, drain = _drive_chunks(
         cfg, chunk, lambda size: _chunk_fn(cfg, size, shapes, False),
         tr, st)
-    return drain_results(cfg, wl, st, _concat_metrics(parts))
+    return drain_results(
+        cfg, wl, st, _concat_metrics(parts),
+        obs=drain.history(0) if drain is not None else None)
 
 
 def run_cohort_scan(cfg, seeds, *, chunk: int = 32,
@@ -944,10 +1030,14 @@ def run_cohort_scan(cfg, seeds, *, chunk: int = 32,
     st = init_state(cfg, wls[0].n_apps, wls[0].max_components,
                     batch=len(seeds))
     shapes = _shapes_key(wls[0], cfg)
-    st, parts = _drive_chunks(
+    st, parts, drain = _drive_chunks(
         cfg, chunk, lambda size: _chunk_fn(cfg, size, shapes, True),
         tr, st)
     metrics = _concat_metrics(parts, axis=1)   # leaves: (S, ticks_total)
+    if drain is not None:
+        # the rings are already drained; slicing them per member would
+        # dispatch eager device ops for data drain_results never reads
+        st = dataclasses.replace(st, obs=None)
     out = []
     for i, (c, w) in enumerate(zip(cfgs, wls)):
         # lazy device slices: drain_results touches only the telemetry
@@ -955,7 +1045,9 @@ def run_cohort_scan(cfg, seeds, *, chunk: int = 32,
         # never copied back to the host
         st_i = jax.tree.map(lambda x, i=i: x[i], st)
         ms_i = jax.tree.map(lambda x, i=i: x[i], metrics)
-        out.append(drain_results(c, w, st_i, ms_i))
+        out.append(drain_results(
+            c, w, st_i, ms_i,
+            obs=drain.history(i) if drain is not None else None))
     return out
 
 
@@ -1010,7 +1102,8 @@ def _shard_chunk_fn(cfg, chunk: int, shapes, mesh):
         sharded = shard_map(jax.vmap(run_chunk), mesh=mesh,
                             in_specs=(spec, spec), out_specs=(spec, spec),
                             **no_check_kwargs())
-        fn = _CHUNK_CACHE[key] = jax.jit(sharded, donate_argnums=(1,))
+        fn = _CHUNK_CACHE[key] = _timed_first_call(
+            jax.jit(sharded, donate_argnums=(1,)), "shard.compile_s")
     return fn
 
 
@@ -1088,7 +1181,7 @@ def run_fleet_shard(cfg, seeds=None, *, chunk: int = 32, wls=None,
             out_shardings=sharding)
     st = init_fn()
     shapes_k = _shapes_key(wls[0], cfg)
-    st, parts = _drive_chunks(
+    st, parts, drain = _drive_chunks(
         cfg, chunk,
         lambda size: _shard_chunk_fn(cfg, size, shapes_k, mesh),
         tr, st)
@@ -1101,5 +1194,8 @@ def run_fleet_shard(cfg, seeds=None, *, chunk: int = 32, wls=None,
     for i, (c, w) in enumerate(zip(cfgs, wls)):
         st_i = jax.tree.map(lambda x, i=i: x[i], st)
         ms_i = jax.tree.map(lambda x, i=i: x[i], metrics)
-        out.append(drain_results(c, w, st_i, ms_i))
+        # padding members past the real fleet are never drained here
+        out.append(drain_results(
+            c, w, st_i, ms_i,
+            obs=drain.history(i) if drain is not None else None))
     return out

@@ -39,6 +39,7 @@ CLI::
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import itertools
 import json
@@ -49,6 +50,8 @@ from typing import Any, Mapping, Sequence
 
 import numpy as np
 
+from repro.obs import (REGISTRY, build_manifest, masked_row_overhead,
+                       obs_summary, span, tracing, write_manifest)
 from repro.sim.cluster import ClusterConfig
 from repro.sim.engine import (SimConfig, _BatchedForecaster, _make_model,
                               forecast_peaks, run_sim)
@@ -430,22 +433,23 @@ def _aggregate(cells: list[dict]) -> list[dict]:
     return aggs
 
 
-def run_grid(base: SimConfig,
-             axes: Mapping[Any, Sequence[Any]] | None = None,
-             seeds: Sequence[int] | None = None,
-             cells: Sequence[Mapping[str, Any]] | None = None,
-             *,
-             workers: int | None = None,
-             engine: str = "vectorized",
-             batch_forecasts: bool = True,
-             batch_mode: str = "leader",
-             barrier_timeout_s: float = 0.25,
-             chunk: int = 32,
-             mesh: int | None = None,
-             out_path: str | None = None,
-             expect_completed: bool = False,
-             forecast_diag: bool = True) -> SweepResult:
-    """Expand and run a sweep grid; aggregate and optionally write JSON.
+def _run_grid(base: SimConfig,
+              axes: Mapping[Any, Sequence[Any]] | None = None,
+              seeds: Sequence[int] | None = None,
+              cells: Sequence[Mapping[str, Any]] | None = None,
+              *,
+              workers: int | None = None,
+              engine: str = "vectorized",
+              batch_forecasts: bool = True,
+              batch_mode: str = "leader",
+              barrier_timeout_s: float = 0.25,
+              chunk: int = 32,
+              mesh: int | None = None,
+              out_path: str | None = None,
+              expect_completed: bool = False,
+              forecast_diag: bool = True) -> SweepResult:
+    """Grid execution body (see :func:`run_grid`, the public wrapper
+    that adds telemetry, tracing and manifest writing around this).
 
     Cells run on a thread pool (NumPy/JAX release the GIL in kernels and
     the forecast batcher needs concurrency to stack windows); each cell
@@ -523,8 +527,10 @@ def run_grid(base: SimConfig,
     # (config, seed) point and the engines never mutate a Trace, so
     # generation happens once, serially, and the arrays are shared
     # read-only across threads
-    workloads = {cfg: build_trace(cfg)
-                 for cfg in {cell.cfg.workload for cell in grid}}
+    with span("build_traces", cat="build",
+              args={"n": len({c.cfg.workload for c in grid})}):
+        workloads = {cfg: build_trace(cfg)
+                     for cfg in {cell.cfg.workload for cell in grid}}
 
     def _record(cell: SweepCell, res, wall_s: float) -> dict:
         s = res.summary()
@@ -532,16 +538,29 @@ def run_grid(base: SimConfig,
             raise RuntimeError(
                 f"cell {cell.name} seed {cell.seed}: only {s['completed']}"
                 f"/{s['n_apps']} apps completed (raise max_ticks?)")
-        return dict(name=cell.name, overrides=cell.overrides,
-                    scenario=cell.scenario, seed=cell.seed, summary=s,
-                    wall_s=round(wall_s, 2))
+        rec = dict(name=cell.name, overrides=cell.overrides,
+                   scenario=cell.scenario, seed=cell.seed, summary=s,
+                   wall_s=round(wall_s, 2))
+        # telemetry blocks ride OUTSIDE summary (additive schema-3
+        # keys): forecast-load counters with the derived masked-rows
+        # overhead, and the obs-ring scalars when rings were on
+        if res.forecast_rows is not None:
+            rec["forecast_rows"] = dict(
+                res.forecast_rows,
+                masked_row_overhead=round(
+                    masked_row_overhead(res.forecast_rows), 2))
+        if res.obs is not None:
+            rec["obs"] = obs_summary(res.obs)
+        return rec
 
     def one(cell: SweepCell) -> dict:
         t0 = time.time()
         client = batcher.client(cell.cfg) if batcher else None
         try:
-            res = run_fn(cell.cfg, workloads[cell.cfg.workload],
-                         forecast_fn=client)
+            with span(f"cell:{cell.name}", cat="cell",
+                      args={"seed": cell.seed}):
+                res = run_fn(cell.cfg, workloads[cell.cfg.workload],
+                             forecast_fn=client)
         finally:
             if client is not None and hasattr(client, "close"):
                 client.close()
@@ -566,13 +585,18 @@ def run_grid(base: SimConfig,
                            and all(strip(c.cfg) == strip(base_cfg)
                                    for c in cells_g))
             t0 = time.time()
-            if homogeneous:
-                results = run_cohort_scan(
-                    base_cfg, seeds_g, chunk=chunk,
-                    wls=[workloads[c.cfg.workload] for c in cells_g])
-            else:
-                results = [run_sim_scan(c.cfg, workloads[c.cfg.workload],
-                                        chunk=chunk) for c in cells_g]
+            with span(f"cohort:{cells_g[0].name}", cat="cohort",
+                      args={"seeds": len(cells_g),
+                            "vmapped": homogeneous}):
+                if homogeneous:
+                    results = run_cohort_scan(
+                        base_cfg, seeds_g, chunk=chunk,
+                        wls=[workloads[c.cfg.workload] for c in cells_g])
+                else:
+                    results = [run_sim_scan(c.cfg,
+                                            workloads[c.cfg.workload],
+                                            chunk=chunk)
+                               for c in cells_g]
             wall = (time.time() - t0) / len(cells_g)
             for cell, res in zip(cells_g, results):
                 recs[id(cell)] = _record(cell, res, wall)
@@ -603,27 +627,28 @@ def run_grid(base: SimConfig,
     diag: list[dict] = []
     cal_diag: list[dict] = []
     seen_diag: set = set()
-    for cell in grid:
-        tr = workloads[cell.cfg.workload]
-        scen_stats.setdefault(cell.scenario, trace_stats(tr))
-        if not forecast_diag or cell.cfg.forecaster == "oracle":
-            continue
-        c = cell.cfg
-        model_key = {"gp": c.gp, "arima": c.arima}.get(c.forecaster)
-        key = (cell.scenario, c.forecaster, model_key, c.window)
-        if key in seen_diag:
-            continue
-        seen_diag.add(key)
-        # ONE shared rolling-forecast pass feeds both reports (the
-        # sampling + forecasting dominates; previously each report ran
-        # its own pass per (scenario, forecaster) pair)
-        rep, cov = forecast_reports(tr, c.forecaster, window=c.window,
-                                    coverage=sweeps_cal,
-                                    gp=c.gp, arima=c.arima)
-        if rep is not None:
-            diag.append({"scenario": cell.scenario, **rep})
-        if cov is not None:
-            cal_diag.append({"scenario": cell.scenario, **cov})
+    with span("diagnostics", cat="diag"):
+        for cell in grid:
+            tr = workloads[cell.cfg.workload]
+            scen_stats.setdefault(cell.scenario, trace_stats(tr))
+            if not forecast_diag or cell.cfg.forecaster == "oracle":
+                continue
+            c = cell.cfg
+            model_key = {"gp": c.gp, "arima": c.arima}.get(c.forecaster)
+            key = (cell.scenario, c.forecaster, model_key, c.window)
+            if key in seen_diag:
+                continue
+            seen_diag.add(key)
+            # ONE shared rolling-forecast pass feeds both reports (the
+            # sampling + forecasting dominates; previously each report
+            # ran its own pass per (scenario, forecaster) pair)
+            rep, cov = forecast_reports(tr, c.forecaster, window=c.window,
+                                        coverage=sweeps_cal,
+                                        gp=c.gp, arima=c.arima)
+            if rep is not None:
+                diag.append({"scenario": cell.scenario, **rep})
+            if cov is not None:
+                cal_diag.append({"scenario": cell.scenario, **cov})
 
     result = SweepResult(
         cells=records, aggregates=_aggregate(records),
@@ -634,6 +659,84 @@ def run_grid(base: SimConfig,
         engine=engine, mesh_devices=mesh_devices)
     if out_path:
         result.write(out_path)
+    return result
+
+
+def run_grid(base: SimConfig,
+             axes: Mapping[Any, Sequence[Any]] | None = None,
+             seeds: Sequence[int] | None = None,
+             cells: Sequence[Mapping[str, Any]] | None = None,
+             *,
+             workers: int | None = None,
+             engine: str = "vectorized",
+             batch_forecasts: bool = True,
+             batch_mode: str = "leader",
+             barrier_timeout_s: float = 0.25,
+             chunk: int = 32,
+             mesh: int | None = None,
+             out_path: str | None = None,
+             expect_completed: bool = False,
+             forecast_diag: bool = True,
+             obs: bool = False,
+             trace_path: str | None = None,
+             manifest_path: str | None = None) -> SweepResult:
+    """Expand and run a sweep grid; aggregate and optionally write JSON.
+
+    See :func:`_run_grid` for the execution model (thread-pooled host
+    engines, vmapped scan cohorts, shard_map fleets).  This wrapper
+    adds the observability plane (``repro.obs``) around it:
+
+    ``obs=True`` enables the device-side telemetry rings on every cell
+    (``SimConfig.obs``; scan/shard engines only — the host engines
+    ignore the flag): each cell record then carries an ``obs`` block of
+    ring-derived scalars, and ``SimResults.obs`` the full per-tick
+    histories.  Cells whose engine collects forecast-load telemetry
+    additionally get a ``forecast_rows`` block with the derived
+    ``masked_row_overhead`` (the padded-batch cost the BENCH_engine
+    ``gp`` block tracks).
+
+    ``trace_path`` writes a Chrome trace-event / Perfetto JSON covering
+    the driver phases (trace build, jit compile, chunk execute, ring
+    drain, per-combo cohorts, diagnostics) — load it in
+    ``chrome://tracing`` or https://ui.perfetto.dev.
+
+    A run manifest (config hashes, jax/jaxlib versions, device
+    topology, compile-time metrics, artifact paths) is written to
+    ``manifest_path``, defaulting to ``<out_path minus .json>
+    .manifest.json`` whenever ``out_path`` is set — so every
+    BENCH_*.json is reproducible from its sidecar.  The manifest's
+    cell hashes are recomputable from its own contents
+    (:func:`repro.obs.load_manifest` verifies the round trip).
+    """
+    if obs:
+        base = _set_path(base, "obs.enabled", True)
+    ctx = (tracing(trace_path) if trace_path is not None
+           else contextlib.nullcontext())
+    t0 = time.time()
+    with ctx:
+        result = _run_grid(
+            base, axes, seeds, cells, workers=workers, engine=engine,
+            batch_forecasts=batch_forecasts, batch_mode=batch_mode,
+            barrier_timeout_s=barrier_timeout_s, chunk=chunk, mesh=mesh,
+            out_path=out_path, expect_completed=expect_completed,
+            forecast_diag=forecast_diag)
+    if manifest_path is None and out_path:
+        manifest_path = (out_path[:-5] if out_path.endswith(".json")
+                         else out_path) + ".manifest.json"
+    if manifest_path:
+        artifacts = {"results": out_path, "trace": trace_path}
+        man = build_manifest(
+            base_config=result.base,
+            cells=[{"name": c["name"], "scenario": c["scenario"],
+                    "seed": c["seed"], "overrides": c["overrides"]}
+                   for c in result.cells],
+            engine=result.engine,
+            artifacts={k: v for k, v in artifacts.items() if v},
+            wall_s=time.time() - t0,
+            metrics=REGISTRY.snapshot(),
+            extra={"mesh_devices": result.mesh_devices, "chunk": chunk,
+                   "obs": obs})
+        write_manifest(manifest_path, man)
     return result
 
 
@@ -719,6 +822,17 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
     ap.add_argument("--no-diag", action="store_true",
                     help="skip per-scenario forecast-error and coverage "
                          "diagnostics")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable device-side telemetry rings on every "
+                         "cell (scan/shard engines; cell records gain "
+                         "an obs block)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the sweep "
+                         "driver phases (open in chrome://tracing or "
+                         "ui.perfetto.dev)")
+    ap.add_argument("--manifest", default=None, metavar="PATH",
+                    help="run-manifest path (default: <out minus "
+                         ".json>.manifest.json)")
     ap.add_argument("--out", default="BENCH_sweep.json")
     args = ap.parse_args(argv)
     if args.seeds < 1:
@@ -748,7 +862,9 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
                       batch_forecasts=not args.no_batch,
                       batch_mode=args.batch_mode, chunk=args.chunk,
                       mesh=args.mesh,
-                      forecast_diag=not args.no_diag, out_path=args.out)
+                      forecast_diag=not args.no_diag, out_path=args.out,
+                      obs=args.obs, trace_path=args.trace,
+                      manifest_path=args.manifest)
 
     print(f"# {len(result.cells)} cells in {result.wall_s:.1f}s "
           f"({result.forecast_requests} forecast requests in "

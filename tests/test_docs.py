@@ -17,7 +17,8 @@ import pytest
 
 ROOT = Path(__file__).resolve().parents[1]
 SNIPPET_FILES = ("README.md", "docs/ARCHITECTURE.md",
-                 "docs/BENCHMARKS.md", "docs/CONTROL_PLANE.md")
+                 "docs/BENCHMARKS.md", "docs/CONTROL_PLANE.md",
+                 "docs/OBSERVABILITY.md")
 COMPILE_ONLY = "docs-smoke: compile-only"
 
 

@@ -1,0 +1,313 @@
+"""Observability-plane tests (``repro.obs``): telemetry-ring identity +
+chunk invariance, span tracing, the metrics registry, run manifests,
+the shared benchmark timer, and the sweep-level wiring.
+
+The two contracts that must NEVER regress (docs/OBSERVABILITY.md):
+
+  * obs DISABLED is structurally absent — ``SimState.obs is None`` and
+    results carry no rings, so compiled programs are bit-identical to
+    the pre-observability engines;
+  * obs ENABLED never perturbs dynamics — summaries equal the obs-off
+    run's, and drained histories are chunk-invariant and identical
+    across solo / cohort / shard execution.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs import (ObsConfig, MetricsRegistry, Tracer, best_of,
+                       build_manifest, cell_hash, config_hash,
+                       load_manifest, masked_row_overhead, obs_summary,
+                       span, time_us, tracing, validate_trace,
+                       write_manifest)
+from repro.obs.rings import RING_FIELDS, RingDrain, obs_init, obs_record
+from repro.sim import ClusterConfig, SimConfig, WorkloadConfig, generate
+from repro.sim.state import init_state
+from repro.sim.step import run_cohort_scan, run_fleet_shard, run_sim_scan
+
+WL = WorkloadConfig(n_apps=16, max_components=4, max_runtime=900.0,
+                    mean_burst_gap=4.0, mean_long_gap=60.0, seed=3)
+CL = ClusterConfig(n_hosts=2, max_running_apps=8)
+OFF = SimConfig(cluster=CL, workload=WL, max_ticks=2000,
+                policy="pessimistic", forecaster="persist")
+ON = dataclasses.replace(OFF, obs=ObsConfig(enabled=True))
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return generate(WL)
+
+
+# ----------------------------------------------------------------------
+# rings: structural absence, identity, invariance
+# ----------------------------------------------------------------------
+
+def test_obs_off_structurally_absent(wl):
+    st = init_state(OFF, wl.n_apps, wl.max_components)
+    assert st.obs is None
+    res = run_sim_scan(OFF, wl, chunk=32)
+    assert res.obs is None
+    assert "obs" not in res.summary()
+
+
+def test_obs_on_does_not_perturb_dynamics(wl):
+    off = run_sim_scan(OFF, wl, chunk=32)
+    on = run_sim_scan(ON, wl, chunk=32)
+    assert on.obs is not None
+    assert off.summary() == on.summary()
+    assert off.turnaround == on.turnaround
+
+
+def test_ring_histories_chunk_invariant(wl):
+    h32 = run_sim_scan(ON, wl, chunk=32).obs
+    h1 = run_sim_scan(ON, wl, chunk=1).obs
+    assert set(h32) == {name for name, _ in RING_FIELDS}
+    for k in h32:
+        np.testing.assert_array_equal(h32[k], h1[k], err_msg=k)
+
+
+def test_ring_history_semantics(wl):
+    res = run_sim_scan(ON, wl, chunk=32)
+    h = res.obs
+    T = h["queue"].shape[0]
+    assert T > 0 and all(v.shape == (T,) for v in h.values())
+    cap_cpu = CL.n_hosts * CL.host_cpu
+    assert float(h["used_cpu"].max()) <= cap_cpu + 1e-3
+    assert h["queue"].min() >= 0
+    # event deltas reconcile with the end-of-run counters
+    assert int(h["oom"].sum()) == res.summary()["oom_kills"]
+    # admissions happen (apps must start running to ever complete)
+    assert int(h["admitted"].sum()) > 0
+    # calibration off -> the coverage rings stay zero
+    assert int(h["cov_resolved"].sum()) == 0
+    # tenancy off -> no gate throttling, flat credit channel
+    assert int(h["throttled"].sum()) == 0
+
+
+def test_cohort_and_shard_histories_match_solo(wl):
+    seeds = [0, 1, 2]
+    wls = [generate(dataclasses.replace(WL, seed=s)) for s in seeds]
+    cohort = run_cohort_scan(ON, seeds, chunk=32, wls=wls)
+    shard = run_fleet_shard(ON, seeds, chunk=32, wls=wls, mesh=1)
+    for s, co, sh in zip(seeds, cohort, shard):
+        solo = run_sim_scan(
+            dataclasses.replace(
+                ON, workload=dataclasses.replace(WL, seed=s)),
+            wls[s], chunk=32)
+        for k in solo.obs:
+            np.testing.assert_array_equal(co.obs[k], solo.obs[k],
+                                          err_msg=f"cohort seed {s}: {k}")
+            np.testing.assert_array_equal(sh.obs[k], solo.obs[k],
+                                          err_msg=f"shard seed {s}: {k}")
+
+
+def test_chunk_must_fit_ring_capacity(wl):
+    small = dataclasses.replace(ON, obs=ObsConfig(enabled=True, ring=8))
+    with pytest.raises(ValueError, match="ring capacity"):
+        run_sim_scan(small, wl, chunk=32)
+
+
+def test_ring_overflow_detected_on_drain():
+    obs = obs_init(ObsConfig(enabled=True, ring=4))
+    active = np.asarray(True)
+    for _ in range(5):      # 5 writes into a 4-slot ring, no drain
+        obs = obs_record(obs, active,
+                         {name: 1 for name, _ in RING_FIELDS})
+    drain = RingDrain()
+    with pytest.raises(RuntimeError, match="ring overflow"):
+        drain.drain(obs)
+
+
+def test_inactive_ticks_record_nothing():
+    obs = obs_init(ObsConfig(enabled=True, ring=8))
+    vals = {name: 7 for name, _ in RING_FIELDS}
+    obs = obs_record(obs, np.asarray(True), vals)
+    obs = obs_record(obs, np.asarray(False), vals)   # padding tick
+    drain = RingDrain()
+    drain.drain(obs)
+    h = drain.history(0)
+    assert h["queue"].shape == (1,)      # only the active tick landed
+    assert int(h["queue"][0]) == 7
+
+
+# ----------------------------------------------------------------------
+# span tracing
+# ----------------------------------------------------------------------
+
+def test_tracing_writes_valid_chrome_trace(tmp_path):
+    path = tmp_path / "trace.json"
+    with tracing(str(path)):
+        with span("outer", cat="test", args={"k": 1}):
+            with span("inner", cat="test"):
+                pass
+    doc = json.loads(path.read_text())
+    assert validate_trace(doc) == []
+    names = [e["name"] for e in doc["traceEvents"]]
+    assert "outer" in names and "inner" in names
+    # events are sorted by timestamp and carry complete-event durations
+    ts = [e["ts"] for e in doc["traceEvents"]]
+    assert ts == sorted(ts)
+    assert all(e["ph"] == "X" and e["dur"] >= 0
+               for e in doc["traceEvents"])
+
+
+def test_span_without_tracer_is_a_noop():
+    with span("untraced"):      # no tracer installed: shared nullcontext
+        pass
+
+
+def test_tracing_refuses_nesting(tmp_path):
+    with tracing(str(tmp_path / "a.json")):
+        with pytest.raises(RuntimeError, match="already installed"):
+            with tracing(str(tmp_path / "b.json")):
+                pass
+
+
+def test_validate_trace_catches_tampering():
+    t = Tracer()
+    with t.span("ok"):
+        pass
+    good = t.to_json()
+    assert validate_trace(good) == []
+    assert validate_trace({"traceEvents": "nope"})
+    no_dur = {"traceEvents": [dict(good["traceEvents"][0])]}
+    del no_dur["traceEvents"][0]["dur"]
+    assert any("dur" in p for p in validate_trace(no_dur))
+    unmatched = {"traceEvents": [
+        {"name": "b", "ph": "B", "ts": 0, "pid": 1, "tid": 1}]}
+    assert any("unclosed" in p.lower() for p in validate_trace(unmatched))
+
+
+# ----------------------------------------------------------------------
+# metrics registry
+# ----------------------------------------------------------------------
+
+def test_metrics_registry_kinds_and_snapshot():
+    reg = MetricsRegistry()
+    reg.counter("runs").inc()
+    reg.counter("runs").inc(2)
+    reg.gauge("devices").set(8)
+    h = reg.histogram("wall_s")
+    h.observe(0.5)
+    h.observe(1.5)
+    snap = reg.snapshot()
+    assert snap["runs"]["value"] == 3
+    assert snap["devices"]["value"] == 8
+    assert snap["wall_s"]["count"] == 2
+    assert snap["wall_s"]["sum"] == pytest.approx(2.0)
+    assert snap["wall_s"]["min"] == pytest.approx(0.5)
+    with pytest.raises(TypeError):
+        reg.gauge("runs")       # name already registered as a counter
+
+
+def test_metrics_exports(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("ticks").inc(42)
+    reg.histogram("compile.s").observe(1.25)
+    jl = tmp_path / "metrics.jsonl"
+    reg.write_jsonl(str(jl), run="r1")
+    reg.write_jsonl(str(jl), run="r2")       # appends
+    lines = [json.loads(ln) for ln in jl.read_text().splitlines()]
+    assert len(lines) == 2
+    assert lines[0]["metrics"]["ticks"]["value"] == 42
+    assert lines[1]["run"] == "r2"
+    prom = tmp_path / "metrics.prom"
+    reg.write_textfile(str(prom))
+    text = prom.read_text()
+    assert "ticks 42" in text
+    # histograms expand; dots sanitize to legal prometheus names
+    assert "compile_s_count 1" in text
+    assert "compile_s_sum 1.25" in text
+
+
+# ----------------------------------------------------------------------
+# run manifests
+# ----------------------------------------------------------------------
+
+def test_manifest_roundtrip_and_tamper_detection(tmp_path):
+    man = build_manifest(
+        base_config=dataclasses.asdict(OFF), engine="scan",
+        cells=[{"name": "a", "seed": 0, "overrides": {"policy": "x"}},
+               {"name": "b", "seed": 1, "overrides": {}}],
+        artifacts={"results": "out.json"}, wall_s=1.0)
+    path = tmp_path / "run.manifest.json"
+    write_manifest(str(path), man)
+    loaded = load_manifest(str(path), verify=True)     # hashes recompute
+    assert loaded["base_config_hash"] == man["base_config_hash"]
+    assert len(loaded["cells"]) == 2
+    assert loaded["environment"]["jax"]
+
+    tampered = json.loads(path.read_text())
+    tampered["base_config"]["policy"] = "optimistic"
+    path.write_text(json.dumps(tampered))
+    with pytest.raises(ValueError, match="hash"):
+        load_manifest(str(path), verify=True)
+
+
+def test_config_and_cell_hashes_are_stable():
+    h1, h2 = config_hash(OFF), config_hash(OFF)
+    assert h1 == h2
+    assert h1 != config_hash(ON)
+    assert cell_hash(h1, {"policy": "baseline"}, 0) \
+        != cell_hash(h1, {"policy": "baseline"}, 1)
+
+
+# ----------------------------------------------------------------------
+# shared timer + report helpers
+# ----------------------------------------------------------------------
+
+def test_best_of_returns_min_wall():
+    calls = []
+    s = best_of(lambda: calls.append(1), 3)
+    assert len(calls) == 3 and s >= 0.0
+
+
+def test_time_us_returns_average_microseconds():
+    us = time_us(lambda x: x + 1, 41, iters=2)
+    assert us > 0.0
+
+
+def test_masked_row_overhead_formula():
+    rows = {"rows_batch": 128, "ticks_forecasting": 10, "rows_ready": 64}
+    assert masked_row_overhead(rows) == pytest.approx(20.0)
+    assert masked_row_overhead({"rows_batch": 1, "ticks_forecasting": 1,
+                                "rows_ready": 0}) == pytest.approx(1.0)
+
+
+def test_obs_summary_shapes(wl):
+    h = run_sim_scan(ON, wl, chunk=32).obs
+    s = obs_summary(h)
+    assert s["ticks"] == h["queue"].shape[0]
+    assert s["oom_total"] >= 0 and s["queue_peak"] >= 0
+    assert 0.0 < s["used_cpu_mean"] <= CL.n_hosts * CL.host_cpu
+    assert "coverage" not in s      # calibration off: nothing resolved
+    assert obs_summary({}) == {"ticks": 0}
+
+
+# ----------------------------------------------------------------------
+# sweep wiring: obs blocks in records, trace + manifest artifacts
+# ----------------------------------------------------------------------
+
+def test_run_grid_obs_trace_manifest(tmp_path):
+    from repro.sim.sweep import quick_base_config, run_grid
+
+    out = tmp_path / "grid.json"
+    trace = tmp_path / "grid.trace.json"
+    base = quick_base_config(n_apps=12, n_hosts=2, max_components=4)
+    res = run_grid(base, {"policy": ["pessimistic"],
+                          "forecaster": ["persist"]},
+                   seeds=[0, 1], engine="scan", obs=True,
+                   out_path=str(out), trace_path=str(trace),
+                   forecast_diag=False)
+    assert all("obs" in c and c["obs"]["ticks"] > 0 for c in res.cells)
+    doc = json.loads(trace.read_text())
+    assert validate_trace(doc) == []
+    cats = {e["cat"] for e in doc["traceEvents"]}
+    assert {"build", "execute", "drain"} <= cats
+    # manifest path defaulted from out_path; hashes round-trip
+    man = load_manifest(str(tmp_path / "grid.manifest.json"), verify=True)
+    assert man["engine"] == "scan"
+    assert len(man["cells"]) == len(res.cells)
+    assert man["artifacts"]["results"] == str(out)
