@@ -1,0 +1,148 @@
+"""Bench regression ratchet: diff fresh BENCH_*.json against baselines.
+
+``python -m benchmarks.run --compare <baseline_dir>`` (or ``python -m
+benchmarks.compare <baseline_dir> [fresh_dir]``) walks every
+``BENCH_*.json`` present in BOTH directories and flags regressions:
+
+  * any ``criteria`` key that is true in the baseline but false in the
+    fresh artifact — a contract the repo used to meet and no longer
+    does — is always a regression;
+  * selected numeric keys (:data:`TOLERANCES`) may not degrade by more
+    than their tolerance ratio.  Tolerances are deliberately generous:
+    CI runners are shared and noisy, and the perf benches already do
+    best-of + escalating re-measurement, so the ratchet exists to
+    catch step-function regressions (a 2x slowdown, a broken
+    safeguard), not 3% jitter.
+
+Baselines live in ``benchmarks/baselines/`` (committed — the
+``BENCH_*.json`` gitignore carries an exception for that directory) and
+are refreshed deliberately by committing new artifacts, which is what
+makes this a ratchet: improvements are free, degradations need a
+human to re-baseline.
+
+Exit status: nonzero when any regression is found (CI fails the job).
+Artifacts present only on one side are reported but never fail — new
+benches have no baseline yet, and sections can be skipped locally.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Sequence
+
+__all__ = ["TOLERANCES", "compare_artifact", "compare_dirs", "main"]
+
+#: artifact basename -> (dotted key path, direction, tolerance ratio).
+#: direction "higher" = fresh may not drop below baseline * (1 - tol);
+#: "lower" = fresh may not rise above baseline * (1 + tol).
+TOLERANCES = {
+    "BENCH_engine.json": (
+        ("cohort_ticks_per_s", "higher", 0.5),
+        ("scan_ticks_per_s", "higher", 0.5),
+    ),
+    "BENCH_obs.json": (
+        ("overhead.on_ticks_per_s", "higher", 0.5),
+        ("overhead.on_overhead", "higher", 0.15),
+    ),
+    "BENCH_tenancy.json": (
+        ("perf.on_ticks_per_s", "higher", 0.5),
+    ),
+    "BENCH_shard.json": (
+        ("fleet.speedup", "higher", 0.5),
+    ),
+}
+
+
+def _dig(doc: dict, path: str):
+    cur = doc
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def compare_artifact(name: str, base: dict, fresh: dict) -> list[str]:
+    """Regressions for one artifact (empty list = clean)."""
+    problems = []
+    base_crit = base.get("criteria", {})
+    fresh_crit = fresh.get("criteria", {})
+    for key, ok in sorted(base_crit.items()):
+        if ok is True and fresh_crit.get(key) is False:
+            problems.append(f"{name}: criterion {key!r} regressed "
+                            f"true -> false")
+    for path, direction, tol in TOLERANCES.get(name, ()):
+        b, f = _dig(base, path), _dig(fresh, path)
+        if not isinstance(b, (int, float)) or not isinstance(f, (int, float)):
+            continue
+        if direction == "higher" and f < b * (1.0 - tol):
+            problems.append(
+                f"{name}: {path} fell {b:.4g} -> {f:.4g} "
+                f"(> {tol:.0%} below baseline)")
+        elif direction == "lower" and f > b * (1.0 + tol):
+            problems.append(
+                f"{name}: {path} rose {b:.4g} -> {f:.4g} "
+                f"(> {tol:.0%} above baseline)")
+    return problems
+
+
+def compare_dirs(baseline_dir: str, fresh_dir: str = ".") -> list[str]:
+    """Regressions across every artifact present in both directories."""
+
+    def _artifacts(d):
+        try:
+            return {f for f in os.listdir(d)
+                    if f.startswith("BENCH_") and f.endswith(".json")
+                    and not any(s in f for s in
+                                (".manifest", ".sweep", ".trace"))}
+        except OSError:
+            return set()
+
+    base_names = _artifacts(baseline_dir)
+    fresh_names = _artifacts(fresh_dir)
+    problems: list[str] = []
+    compared = 0
+    for name in sorted(base_names & fresh_names):
+        with open(os.path.join(baseline_dir, name)) as f:
+            base = json.load(f)
+        with open(os.path.join(fresh_dir, name)) as f:
+            fresh = json.load(f)
+        found = compare_artifact(name, base, fresh)
+        compared += 1
+        status = "REGRESSED" if found else "ok"
+        print(f"# compare {name}: {status}")
+        problems.extend(found)
+    for name in sorted(base_names - fresh_names):
+        print(f"# compare {name}: no fresh artifact (section skipped?)")
+    for name in sorted(fresh_names - base_names):
+        print(f"# compare {name}: no baseline yet")
+    if not compared:
+        print("# compare: no artifact present in both directories")
+    return problems
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.compare",
+        description="Diff fresh BENCH_*.json against committed "
+                    "baselines; nonzero exit on regression.")
+    ap.add_argument("baseline_dir",
+                    help="directory of committed baseline artifacts "
+                         "(e.g. benchmarks/baselines)")
+    ap.add_argument("fresh_dir", nargs="?", default=".",
+                    help="directory of freshly produced artifacts "
+                         "(default: cwd)")
+    ns = ap.parse_args(argv)
+    problems = compare_dirs(ns.baseline_dir, ns.fresh_dir)
+    for p in problems:
+        print(f"REGRESSION: {p}")
+    if problems:
+        return 1
+    print("# compare: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,6 @@
-"""Observability-plane benchmark (BENCH_obs.json).
+"""Observability-plane benchmark (BENCH_obs.json, schema 2).
 
-Four cells guard the obs plane's contract (docs/OBSERVABILITY.md):
+Five cells guard the obs plane's contract (docs/OBSERVABILITY.md):
 
   * **overhead** — cohort ticks/sec with telemetry rings ON vs the
     BENCH_engine.json reference (same quick cell: 8-seed vmapped
@@ -17,7 +17,14 @@ Four cells guard the obs plane's contract (docs/OBSERVABILITY.md):
   * **trace + manifest** — a tiny obs-enabled ``run_grid`` writes a
     Chrome trace-event JSON that passes ``validate_trace`` and a run
     manifest whose config hashes round-trip (``load_manifest``
-    re-derives and checks them).  Both files are CI artifacts.
+    re-derives and checks them); a smoke alert rule fires on every
+    cell and must round-trip through the verified manifest AND show up
+    in the rendered dashboard HTML together with all 13 ring channels.
+    The files are CI artifacts.
+  * **watchdog** — the default alert rules fire nothing on the quiet
+    google/conformal baseline cell, while an injected flashcrowd OOM
+    burst and a forced coverage drift are each detected within their
+    rule windows (known onset tick -> bounded detection latency).
 """
 from __future__ import annotations
 
@@ -122,18 +129,26 @@ def _ring_invariance_cell() -> dict:
 
 
 def _trace_manifest_cell(out_prefix: str) -> dict:
-    from repro.obs import load_manifest, validate_trace
+    from repro.obs import AlertRule, load_manifest, validate_trace
+    from repro.obs.rings import RING_FIELDS
     from repro.sim.sweep import quick_base_config, run_grid
 
     sweep_json = f"{out_prefix}.sweep.json"
     trace_json = f"{out_prefix}.trace.json"
     manifest_json = f"{out_prefix}.manifest.json"
+    report_html = f"{out_prefix}.report.html"
     base = quick_base_config(n_apps=24, n_hosts=2, max_components=4)
+    # a trivially-firing smoke rule (every run admits apps) so the
+    # alert -> manifest -> dashboard round trip always has a record
+    smoke_rule = AlertRule("smoke-admitted", "admitted", "burst",
+                           threshold=1.0, severity="info", window=8)
     res = run_grid(base, {"policy": ["baseline", "pessimistic"],
                           "forecaster": ["persist"]},
                    seeds=range(2), engine="scan", obs=True,
                    out_path=sweep_json, trace_path=trace_json,
-                   manifest_path=manifest_json, forecast_diag=False)
+                   manifest_path=manifest_json, forecast_diag=False,
+                   alert_rules=(smoke_rule,),
+                   dashboard_path=report_html)
     with open(trace_json) as f:
         problems = validate_trace(json.load(f))
     try:
@@ -142,6 +157,16 @@ def _trace_manifest_cell(out_prefix: str) -> dict:
     except (ValueError, KeyError) as e:
         man, roundtrip, man_err = None, False, str(e)
     obs_cells = sum(1 for c in res.cells if "obs" in c)
+    man_alerts = (man or {}).get("alerts", [])
+    alerts_roundtrip = (roundtrip and len(man_alerts) == len(res.cells)
+                        and all(a["rule"] == "smoke-admitted"
+                                for a in man_alerts))
+    with open(report_html) as f:
+        html = f.read()
+    channels = [f[0] if isinstance(f, tuple) else f for f in RING_FIELDS]
+    alerts_in_dashboard = ("smoke-admitted" in html
+                           and "fired alerts" in html
+                           and all(f">{c}<" in html for c in channels))
     return {
         "cells": len(res.cells),
         "cells_with_obs": obs_cells,
@@ -150,8 +175,71 @@ def _trace_manifest_cell(out_prefix: str) -> dict:
         "manifest_roundtrip": roundtrip,
         "manifest_error": man_err,
         "manifest_cells": len(man["cells"]) if man else 0,
+        "manifest_alerts": len(man_alerts),
+        "alerts_roundtrip": alerts_roundtrip,
+        "dashboard_channels": len(channels),
+        "alerts_in_dashboard": alerts_in_dashboard,
         "artifacts": {"sweep": sweep_json, "trace": trace_json,
-                      "manifest": manifest_json},
+                      "manifest": manifest_json, "report": report_html},
+    }
+
+
+def _watchdog_cell() -> dict:
+    """Alert-watchdog validation on real scan-engine histories.
+
+    The baseline google/conformal cell must fire ZERO default rules; a
+    deterministic OOM burst injected into the flashcrowd history must
+    trip ``oom-burst`` within its 16-tick window; forcing half the
+    resolved forecasts in the google tail to miscover must trip
+    ``coverage-drift`` within its (run-clamped) window.  Injection is
+    post-drain — real dynamics, synthetic anomaly — so detection
+    latency is measured against a known ground-truth onset tick.
+    """
+    from repro.obs import ObsConfig, evaluate_rules
+    from repro.sim.step import run_sim_scan
+    from repro.sim.sweep import _apply_overrides, quick_base_config
+
+    def cell(overrides):
+        cfg = _apply_overrides(quick_base_config(), overrides)
+        cfg = dataclasses.replace(cfg, obs=ObsConfig(enabled=True))
+        return run_sim_scan(cfg)
+
+    base = cell({"scenario": "google", "policy": "pessimistic",
+                 "calibration": "conformal"})
+    quiet = evaluate_rules(base.obs, nominal_q=0.9, tenancy=base.tenancy,
+                           registry=None)
+
+    flash = cell({"scenario": "flashcrowd", "policy": "optimistic"})
+    h = dict(flash.obs)
+    t0, burst_win = 150, 16
+    oom = h["oom"].astype(np.float64).copy()
+    oom[t0:t0 + 20] += np.tile([2.0, 3.0], 10)
+    h["oom"] = oom
+    fired = evaluate_rules(h, registry=None)
+    oom_hits = [a for a in fired if a["rule"] == "oom-burst"]
+    oom_first = oom_hits[0]["first_tick"] if oom_hits else None
+    oom_ok = bool(oom_hits) and t0 <= oom_first <= t0 + burst_win
+
+    h = dict(base.obs)
+    t = int(h["cov_resolved"].shape[0])
+    onset, cov_win = t // 2, 128
+    err = h["cov_errors"].astype(np.float64).copy()
+    err[onset:] = np.maximum(err[onset:],
+                             0.5 * h["cov_resolved"][onset:])
+    h["cov_errors"] = err
+    fired = evaluate_rules(h, nominal_q=0.9, registry=None)
+    cov_hits = [a for a in fired if a["rule"] == "coverage-drift"]
+    cov_first = cov_hits[0]["first_tick"] if cov_hits else None
+    cov_ok = bool(cov_hits) and onset <= cov_first <= onset + cov_win
+
+    return {
+        "baseline_ticks": int(base.obs["queue"].shape[0]),
+        "baseline_fired": [a["rule"] for a in quiet],
+        "baseline_quiet": not quiet,
+        "oom_burst": {"onset": t0, "window": burst_win,
+                      "first_tick": oom_first, "detected": oom_ok},
+        "coverage_drift": {"onset": onset, "window": cov_win,
+                           "first_tick": cov_first, "detected": cov_ok},
     }
 
 
@@ -163,11 +251,13 @@ def run(out: str = "BENCH_obs.json", reps: int = 20,
     invariance = _ring_invariance_cell()
     prefix = out[:-5] if out.endswith(".json") else out
     tm = _trace_manifest_cell(prefix)
+    wd = _watchdog_cell()
     result = {
-        "schema": 1,
+        "schema": 2,
         "overhead": overhead,
         "ring_invariance": invariance,
         "trace_manifest": tm,
+        "watchdog": wd,
         "criteria": {
             "disabled_identity": overhead["disabled_identity"],
             "ring_chunk_invariant": invariance["chunk_invariant"],
@@ -175,6 +265,12 @@ def run(out: str = "BENCH_obs.json", reps: int = 20,
                 overhead["on_vs_ref_ratio"] >= OVERHEAD_RATIO,
             "trace_valid": tm["trace_valid"],
             "manifest_roundtrip": tm["manifest_roundtrip"],
+            "watchdog_baseline_quiet": wd["baseline_quiet"],
+            "watchdog_oom_burst_detected": wd["oom_burst"]["detected"],
+            "watchdog_coverage_drift_detected":
+                wd["coverage_drift"]["detected"],
+            "alerts_manifest_roundtrip": tm["alerts_roundtrip"],
+            "alerts_in_dashboard": tm["alerts_in_dashboard"],
         },
     }
     with open(out, "w") as f:
@@ -187,7 +283,14 @@ def run(out: str = "BENCH_obs.json", reps: int = 20,
           f"{invariance['fields']} fields, chunk-invariant="
           f"{invariance['chunk_invariant']}")
     print(f"trace/manifest: {tm['cells']} cells, trace_valid="
-          f"{tm['trace_valid']}, roundtrip={tm['manifest_roundtrip']}")
+          f"{tm['trace_valid']}, roundtrip={tm['manifest_roundtrip']}, "
+          f"alerts={tm['manifest_alerts']}, "
+          f"dashboard={tm['alerts_in_dashboard']}")
+    print(f"watchdog: baseline_fired={wd['baseline_fired']}, "
+          f"oom first_tick={wd['oom_burst']['first_tick']} "
+          f"(onset {wd['oom_burst']['onset']}), cov first_tick="
+          f"{wd['coverage_drift']['first_tick']} "
+          f"(onset {wd['coverage_drift']['onset']})")
     print(f"criteria: {result['criteria']}")
     return result
 

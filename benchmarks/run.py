@@ -22,12 +22,18 @@
          .manifest.json artifacts)
   roofline dry-run-derived roofline table (if dryrun_results.json exists)
 
-``python -m benchmarks.run [--only SECTION] [--full]``
+``python -m benchmarks.run [--only SECTION] [--full] [--compare DIR]``
 
 Every section writes at most one ``BENCH_<name>.json`` artifact (all
 gitignored; CI uploads them).  Arbitrary ad-hoc grids — any policy x
 forecaster x safeguard x scenario x seed cross product — run through
 ``python -m repro.sim.sweep`` directly.
+
+``--compare DIR`` diffs the artifacts in the cwd against the committed
+baselines in DIR (``benchmarks/baselines`` in CI) and exits nonzero on
+regression — see ``benchmarks.compare`` for the tolerance policy.
+Without ``--only``, ``--compare`` runs the diff alone (compare-only
+mode: CI produces artifacts via the per-section smokes first).
 """
 from __future__ import annotations
 
@@ -46,7 +52,14 @@ def main() -> None:
     ap.add_argument("--only", default=None, choices=SECTIONS)
     ap.add_argument("--full", action="store_true",
                     help="paper-scale runs (hours); default is CI scale")
+    ap.add_argument("--compare", default=None, metavar="DIR",
+                    help="diff cwd BENCH_*.json against the baselines "
+                         "in DIR; nonzero exit on regression.  Without "
+                         "--only, runs the diff alone")
     args = ap.parse_args()
+    if args.compare is not None and args.only is None:
+        from benchmarks import compare
+        sys.exit(compare.main([args.compare]))
     quick = not args.full
     sections = [args.only] if args.only else list(SECTIONS)
     failures = 0
@@ -105,6 +118,9 @@ def main() -> None:
             traceback.print_exc()
         print(f"----- {sec} done in {time.time() - t0:.0f}s", flush=True)
 
+    if args.compare is not None:
+        from benchmarks import compare
+        failures += compare.main([args.compare])
     if failures:
         sys.exit(1)
 

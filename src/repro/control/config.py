@@ -20,6 +20,14 @@ SLO_CLASSES = ("best-effort", "standard", "premium")
 #: tight stretch; best-effort tolerates a long queue.
 SLO_STRETCH = (8.0, 4.0, 2.0)
 
+#: Error budget per SLO class: the fraction of a tenant's apps allowed
+#: to MISS their turnaround SLO before the class's budget is spent.
+#: This is the denominator of the obs plane's SLO burn-rate alerts
+#: (``repro.obs.alerts``): burn 1.0 = exactly on budget, burn >= the
+#: rule threshold = paging.  Best-effort buys a wide budget, premium a
+#: tight one — same ordering as ``SLO_STRETCH``.
+SLO_BUDGET = (0.25, 0.10, 0.02)
+
 
 @dataclasses.dataclass(frozen=True)
 class TenancyConfig:

@@ -38,6 +38,13 @@ def tenancy_summary(cfg: TenancyConfig, trace, turnaround: dict,
     slo_met = np.full(Tn, np.nan)
     done_t = np.zeros(Tn, np.int64)
     fail_t = np.zeros(Tn, np.int64)
+    # Majority SLO class per tenant: the alerting plane keys its
+    # per-tenant error budget (SLO_BUDGET) off this class code.
+    slo_class = np.zeros(Tn, np.int64)
+    for t in range(Tn):
+        codes = slo[tenant == t]
+        if codes.size:
+            slo_class[t] = int(np.bincount(codes).argmax())
     stretch = np.asarray(SLO_STRETCH)[slo]
     for t in range(Tn):
         gids = [g for g in turnaround if tenant[g] == t]
@@ -67,4 +74,5 @@ def tenancy_summary(cfg: TenancyConfig, trace, turnaround: dict,
         "turnaround_mean": _fl(ta_mean),
         "turnaround_p95": _fl(ta_p95),
         "slo_met_frac": _fl(slo_met),
+        "slo_class": [int(v) for v in slo_class],
     }

@@ -16,7 +16,7 @@ import threading
 import time
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
-           "REGISTRY", "registry"]
+           "REGISTRY", "registry", "series_key"]
 
 
 class Counter:
@@ -24,8 +24,10 @@ class Counter:
 
     kind = "counter"
 
-    def __init__(self):
+    def __init__(self, family: str = "", labels: dict | None = None):
         self.value = 0.0
+        self.family = family
+        self.labels = dict(labels or {})
 
     def inc(self, v: float = 1.0) -> None:
         if v < 0:
@@ -33,7 +35,10 @@ class Counter:
         self.value += v
 
     def snapshot(self) -> dict:
-        return {"type": self.kind, "value": self.value}
+        d = {"type": self.kind, "value": self.value}
+        if self.labels:
+            d["labels"] = dict(self.labels)
+        return d
 
 
 class Gauge:
@@ -41,14 +46,19 @@ class Gauge:
 
     kind = "gauge"
 
-    def __init__(self):
+    def __init__(self, family: str = "", labels: dict | None = None):
         self.value = 0.0
+        self.family = family
+        self.labels = dict(labels or {})
 
     def set(self, v: float) -> None:
         self.value = float(v)
 
     def snapshot(self) -> dict:
-        return {"type": self.kind, "value": self.value}
+        d = {"type": self.kind, "value": self.value}
+        if self.labels:
+            d["labels"] = dict(self.labels)
+        return d
 
 
 class Histogram:
@@ -58,11 +68,13 @@ class Histogram:
 
     kind = "histogram"
 
-    def __init__(self):
+    def __init__(self, family: str = "", labels: dict | None = None):
         self.count = 0
         self.total = 0.0
         self.min = math.inf
         self.max = -math.inf
+        self.family = family
+        self.labels = dict(labels or {})
 
     def observe(self, v: float) -> None:
         v = float(v)
@@ -72,36 +84,61 @@ class Histogram:
         self.max = max(self.max, v)
 
     def snapshot(self) -> dict:
-        return {"type": self.kind, "count": self.count, "sum": self.total,
-                "min": (None if self.count == 0 else self.min),
-                "max": (None if self.count == 0 else self.max)}
+        d = {"type": self.kind, "count": self.count, "sum": self.total,
+             "min": (None if self.count == 0 else self.min),
+             "max": (None if self.count == 0 else self.max)}
+        if self.labels:
+            d["labels"] = dict(self.labels)
+        return d
+
+
+def series_key(name: str, labels: dict | None) -> str:
+    """Canonical ``family{k="v",...}`` series identity (sorted label
+    order, so kwargs order never creates duplicate series)."""
+    if not labels:
+        return name
+    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return f"{name}{{{inner}}}"
 
 
 class MetricsRegistry:
-    """Thread-safe name -> metric map (get-or-create per kind)."""
+    """Thread-safe series -> metric map (get-or-create per kind).
+
+    A *family* is the bare metric name; a *series* is family + labels
+    (``counter("alerts.fired", rule="oom-burst", severity="page")``).
+    Unlabeled calls keep their historical single-series behavior.
+    """
 
     def __init__(self):
         self._lock = threading.Lock()
         self._metrics: dict[str, Counter | Gauge | Histogram] = {}
+        self._help: dict[str, str] = {}
 
-    def _get(self, name: str, cls):
+    def _get(self, name: str, cls, labels: dict):
+        labels = {k: str(v) for k, v in labels.items()}
+        key = series_key(name, labels)
         with self._lock:
-            m = self._metrics.get(name)
+            m = self._metrics.get(key)
             if m is None:
-                m = self._metrics[name] = cls()
+                m = self._metrics[key] = cls(family=name, labels=labels)
             elif not isinstance(m, cls):
-                raise TypeError(f"metric {name!r} is a {m.kind}, not a "
+                raise TypeError(f"metric {key!r} is a {m.kind}, not a "
                                 f"{cls.kind}")
             return m
 
-    def counter(self, name: str) -> Counter:
-        return self._get(name, Counter)
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get(name, Counter, labels)
 
-    def gauge(self, name: str) -> Gauge:
-        return self._get(name, Gauge)
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get(name, Gauge, labels)
 
-    def histogram(self, name: str) -> Histogram:
-        return self._get(name, Histogram)
+    def histogram(self, name: str, **labels) -> Histogram:
+        return self._get(name, Histogram, labels)
+
+    def set_help(self, name: str, text: str) -> None:
+        """Register the ``# HELP`` line for a metric family."""
+        with self._lock:
+            self._help[name] = text
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -121,21 +158,39 @@ class MetricsRegistry:
             f.write(json.dumps(rec, sort_keys=True) + "\n")
 
     def write_textfile(self, path: str) -> None:
-        """Prometheus textfile-collector exposition format (one flat
-        sample per series; histograms expand to _count/_sum/_min/_max)."""
-        lines = []
-        for name, snap in self.snapshot().items():
-            pname = _prom_name(name)
+        """Prometheus textfile-collector exposition format.
+
+        ``# HELP`` / ``# TYPE`` are emitted ONCE per metric *family*
+        (labeled series of one family share a single header block, as
+        the exposition format requires — a repeated TYPE line is a
+        parse error for promtool), label values are escaped per the
+        format (backslash, double quote, newline), and histograms
+        expand to ``_count`` / ``_sum`` / ``_min`` / ``_max`` samples.
+        """
+        with self._lock:
+            items = sorted(self._metrics.items(),
+                           key=lambda kv: (kv[1].family, kv[0]))
+            helps = dict(self._help)
+        lines: list[str] = []
+        seen: set[str] = set()
+        for key, m in items:
+            pname = _prom_name(m.family or key)
+            snap = m.snapshot()
+            if m.family not in seen:
+                seen.add(m.family)
+                help_text = helps.get(m.family, m.family or key)
+                lines.append(f"# HELP {pname} {_escape_help(help_text)}")
+                ptype = "summary" if snap["type"] == "histogram" else snap["type"]
+                lines.append(f"# TYPE {pname} {ptype}")
+            lbl = _prom_labels(m.labels)
             if snap["type"] == "histogram":
-                lines.append(f"# TYPE {pname} summary")
-                lines.append(f"{pname}_count {snap['count']}")
-                lines.append(f"{pname}_sum {_prom_val(snap['sum'])}")
+                lines.append(f"{pname}_count{lbl} {snap['count']}")
+                lines.append(f"{pname}_sum{lbl} {_prom_val(snap['sum'])}")
                 for k in ("min", "max"):
                     if snap[k] is not None:
-                        lines.append(f"{pname}_{k} {_prom_val(snap[k])}")
+                        lines.append(f"{pname}_{k}{lbl} {_prom_val(snap[k])}")
             else:
-                lines.append(f"# TYPE {pname} {snap['type']}")
-                lines.append(f"{pname} {_prom_val(snap['value'])}")
+                lines.append(f"{pname}{lbl} {_prom_val(snap['value'])}")
         with open(path, "w") as f:
             f.write("\n".join(lines) + "\n")
 
@@ -143,6 +198,25 @@ class MetricsRegistry:
 def _prom_name(name: str) -> str:
     out = re.sub(r"[^a-zA-Z0-9_:]", "_", name)
     return out if re.match(r"^[a-zA-Z_:]", out) else "_" + out
+
+
+def _escape_label(v: str) -> str:
+    """Label-value escaping per the exposition format."""
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _escape_help(v: str) -> str:
+    """HELP text escapes backslash and newline (but not quotes)."""
+    return v.replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def _prom_labels(labels: dict) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(
+        f'{re.sub(r"[^a-zA-Z0-9_]", "_", k)}="{_escape_label(str(v))}"'
+        for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
 
 
 def _prom_val(v: float) -> str:

@@ -3,7 +3,9 @@ compact summaries that sweep cells, manifests, and BENCH artifacts carry.
 """
 from __future__ import annotations
 
-__all__ = ["masked_row_overhead", "obs_summary"]
+import numpy as np
+
+__all__ = ["masked_row_overhead", "obs_summary", "compact_history"]
 
 
 def masked_row_overhead(rows: dict) -> float:
@@ -39,6 +41,39 @@ def obs_summary(history: dict) -> dict:
     out["queue_peak"] = int(history["queue"].max())
     out["gap_cpu_peak"] = float(history["gap_cpu"].max(initial=0.0))
     res = out["cov_resolved_total"]
-    if res:
+    # guard the zero-resolved case explicitly: a short run that never
+    # resolves a forecast must omit the key rather than divide by zero
+    # and leak NaN into the cell summary / manifest
+    if res > 0:
         out["coverage"] = round(1.0 - out["cov_errors_total"] / res, 4)
     return out
+
+
+def compact_history(history: dict, max_points: int = 512) -> dict:
+    """Downsample a drained history for artifact embedding (dashboard
+    sparklines): every channel is bucketed to at most ``max_points``.
+
+    Event channels (per-tick deltas) SUM within each bucket so run
+    totals survive the downsampling exactly; level channels take the
+    bucket MEAN.  The stride is recorded so alert tick coordinates map
+    onto bucket indices (``tick // stride``).
+    """
+    if not history:
+        return {"ticks": 0, "stride": 1, "channels": {}}
+    t = int(next(iter(history.values())).shape[0])
+    stride = max(1, -(-t // max_points))        # ceil div
+    n = -(-t // stride)
+    event = {"oom", "fail", "preempt", "admitted", "throttled",
+             "cov_resolved", "cov_errors"}
+    channels = {}
+    for name, x in history.items():
+        x = np.asarray(x, np.float64)
+        pad = np.full(n * stride, np.nan)
+        pad[:t] = x
+        buckets = pad.reshape(n, stride)
+        if name in event:
+            y = np.nansum(buckets, axis=1)
+        else:
+            y = np.nanmean(buckets, axis=1)
+        channels[name] = [round(float(v), 4) for v in y]
+    return {"ticks": t, "stride": stride, "channels": channels}

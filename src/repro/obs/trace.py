@@ -41,14 +41,23 @@ class Tracer:
     @contextlib.contextmanager
     def span(self, name: str, cat: str = "sweep", args: dict | None = None):
         t0 = self._now_us()
+        error: str | None = None
         try:
             yield
+        except BaseException as e:
+            # close the span with an error tag and re-raise: the phase
+            # still shows up in the waterfall (flagged), and the tracer
+            # state stays consistent for whatever spans come after
+            error = type(e).__name__
+            raise
         finally:
             ev = {"name": name, "cat": cat, "ph": "X", "ts": t0,
                   "dur": self._now_us() - t0, "pid": os.getpid(),
                   "tid": threading.get_ident()}
-            if args:
-                ev["args"] = args
+            if args or error:
+                ev["args"] = dict(args or {})
+                if error:
+                    ev["args"]["error"] = error
             with self._lock:
                 self.events.append(ev)
 

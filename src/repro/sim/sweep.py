@@ -50,7 +50,9 @@ from typing import Any, Mapping, Sequence
 
 import numpy as np
 
-from repro.obs import (REGISTRY, build_manifest, masked_row_overhead,
+from repro.obs import (DEFAULT_RULES, REGISTRY, build_manifest,
+                       compact_history, evaluate_rules, masked_row_overhead,
+                       render_dashboard, write_alert_log,
                        obs_summary, span, tracing, write_manifest)
 from repro.sim.cluster import ClusterConfig
 from repro.sim.engine import (SimConfig, _BatchedForecaster, _make_model,
@@ -447,7 +449,8 @@ def _run_grid(base: SimConfig,
               mesh: int | None = None,
               out_path: str | None = None,
               expect_completed: bool = False,
-              forecast_diag: bool = True) -> SweepResult:
+              forecast_diag: bool = True,
+              alert_rules: Sequence = DEFAULT_RULES) -> SweepResult:
     """Grid execution body (see :func:`run_grid`, the public wrapper
     that adds telemetry, tracing and manifest writing around this).
 
@@ -551,6 +554,18 @@ def _run_grid(base: SimConfig,
                     masked_row_overhead(res.forecast_rows), 2))
         if res.obs is not None:
             rec["obs"] = obs_summary(res.obs)
+            # downsampled per-channel series for the dashboard
+            # sparklines (event channels bucket-SUM so totals survive)
+            rec["obs"]["history"] = compact_history(res.obs)
+            if alert_rules:
+                fired = evaluate_rules(
+                    res.obs, alert_rules,
+                    nominal_q=cell.cfg.calibration.q,
+                    tenancy=res.tenancy)
+                for a in fired:
+                    a["cell"] = cell.name
+                    a["seed"] = cell.seed
+                rec["obs"]["alerts"] = fired
         return rec
 
     def one(cell: SweepCell) -> dict:
@@ -679,7 +694,10 @@ def run_grid(base: SimConfig,
              forecast_diag: bool = True,
              obs: bool = False,
              trace_path: str | None = None,
-             manifest_path: str | None = None) -> SweepResult:
+             manifest_path: str | None = None,
+             alert_rules: Sequence = DEFAULT_RULES,
+             alert_log_path: str | None = None,
+             dashboard_path: str | None = None) -> SweepResult:
     """Expand and run a sweep grid; aggregate and optionally write JSON.
 
     See :func:`_run_grid` for the execution model (thread-pooled host
@@ -707,6 +725,19 @@ def run_grid(base: SimConfig,
     BENCH_*.json is reproducible from its sidecar.  The manifest's
     cell hashes are recomputable from its own contents
     (:func:`repro.obs.load_manifest` verifies the round trip).
+
+    Obs-enabled cells are additionally run through the alert watchdog
+    (``alert_rules``, default :data:`repro.obs.DEFAULT_RULES`; pass an
+    empty tuple to skip): fired alerts land in the per-cell ``obs``
+    block, the manifest's un-hashed ``alerts`` extra, the labeled
+    ``alerts.fired{rule,severity}`` REGISTRY counters, and — when
+    ``out_path`` or ``alert_log_path`` is set — a JSONL alert log next
+    to the results (``<out minus .json>.alerts.jsonl``).
+
+    ``dashboard_path`` renders the self-contained HTML report
+    (:func:`repro.obs.render_dashboard`) from the freshly written
+    artifacts: per-cell ring sparklines with alert highlights, the
+    span waterfall, the metrics snapshot, and the fired-alert table.
     """
     if obs:
         base = _set_path(base, "obs.enabled", True)
@@ -719,12 +750,21 @@ def run_grid(base: SimConfig,
             batch_forecasts=batch_forecasts, batch_mode=batch_mode,
             barrier_timeout_s=barrier_timeout_s, chunk=chunk, mesh=mesh,
             out_path=out_path, expect_completed=expect_completed,
-            forecast_diag=forecast_diag)
+            forecast_diag=forecast_diag, alert_rules=alert_rules)
+    alerts = [a for c in result.cells
+              for a in (c.get("obs") or {}).get("alerts", [])]
+    if alert_log_path is None and out_path and alerts:
+        alert_log_path = (out_path[:-5] if out_path.endswith(".json")
+                          else out_path) + ".alerts.jsonl"
+    if alert_log_path:
+        write_alert_log(alert_log_path, alerts)
     if manifest_path is None and out_path:
         manifest_path = (out_path[:-5] if out_path.endswith(".json")
                          else out_path) + ".manifest.json"
-    if manifest_path:
-        artifacts = {"results": out_path, "trace": trace_path}
+    man = None
+    if manifest_path or dashboard_path:
+        artifacts = {"results": out_path, "trace": trace_path,
+                     "alerts": alert_log_path}
         man = build_manifest(
             base_config=result.base,
             cells=[{"name": c["name"], "scenario": c["scenario"],
@@ -735,8 +775,15 @@ def run_grid(base: SimConfig,
             wall_s=time.time() - t0,
             metrics=REGISTRY.snapshot(),
             extra={"mesh_devices": result.mesh_devices, "chunk": chunk,
-                   "obs": obs})
+                   "obs": obs, "alerts": alerts})
+    if manifest_path:
         write_manifest(manifest_path, man)
+    if dashboard_path:
+        # prefer the on-disk manifest so artifact-path resolution gets
+        # exercised exactly as it would on a CI artifact download
+        render_dashboard(manifest_path or man, dashboard_path,
+                         results=None if (manifest_path and out_path)
+                         else {"cells": result.cells})
     return result
 
 
@@ -833,6 +880,15 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
     ap.add_argument("--manifest", default=None, metavar="PATH",
                     help="run-manifest path (default: <out minus "
                          ".json>.manifest.json)")
+    ap.add_argument("--dashboard", default=None, metavar="PATH",
+                    help="render the self-contained HTML report "
+                         "(sparklines, waterfall, fired alerts) to "
+                         "PATH after the run")
+    ap.add_argument("--alert-log", default=None, metavar="PATH",
+                    help="JSONL fired-alert log (default: <out minus "
+                         ".json>.alerts.jsonl when any alert fires)")
+    ap.add_argument("--no-alerts", action="store_true",
+                    help="skip the alert watchdog on obs-enabled cells")
     ap.add_argument("--out", default="BENCH_sweep.json")
     args = ap.parse_args(argv)
     if args.seeds < 1:
@@ -864,7 +920,10 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
                       mesh=args.mesh,
                       forecast_diag=not args.no_diag, out_path=args.out,
                       obs=args.obs, trace_path=args.trace,
-                      manifest_path=args.manifest)
+                      manifest_path=args.manifest,
+                      alert_rules=() if args.no_alerts else DEFAULT_RULES,
+                      alert_log_path=args.alert_log,
+                      dashboard_path=args.dashboard)
 
     print(f"# {len(result.cells)} cells in {result.wall_s:.1f}s "
           f"({result.forecast_requests} forecast requests in "

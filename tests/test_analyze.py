@@ -1,0 +1,417 @@
+"""Telemetry analysis plane: detectors, alert rules, dashboard.
+
+Contracts under test (docs/OBSERVABILITY.md "Alerting" / "Dashboard"):
+
+  * detectors are vectorized post-drain NumPy — exact closed forms
+    (EWMA blocked recursion, CUSUM cumsum-minus-running-min), quiet on
+    stationary noise, firing on injected anomalies with bounded
+    detection latency;
+  * ``AlertRule`` sets evaluate per cell; fired alerts are typed
+    records that reach the per-cell obs block, the manifest's un-hashed
+    ``alerts`` extra, labeled REGISTRY counters, and the JSONL log;
+  * the dashboard renders every ring channel and the fired-alert table
+    into one self-contained HTML file;
+  * spans record an error flag when the body raises (state intact),
+    and concurrent spans from a thread pool produce a valid trace.
+"""
+import dataclasses
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs import (DEFAULT_RULES, AlertRule, MetricsRegistry, Tracer,
+                       compact_history, evaluate_rules, load_manifest,
+                       obs_summary, render_dashboard, validate_trace,
+                       write_alert_log)
+from repro.obs.analyze import (burn_rate_detect, burst_detect,
+                               coverage_drift_detect, cusum_detect, ewma,
+                               ewma_detect, rolling_sum)
+from repro.obs.rings import RING_FIELDS
+
+CHANNELS = [f[0] if isinstance(f, tuple) else f for f in RING_FIELDS]
+RNG = np.random.default_rng(7)
+
+
+def _quiet_history(t=400):
+    """Synthetic stationary history over all 13 ring channels."""
+    h = {}
+    for ch in CHANNELS:
+        if ch in ("oom", "fail", "preempt", "throttled"):
+            h[ch] = np.zeros(t)
+        elif ch == "admitted":
+            h[ch] = RNG.integers(0, 2, t).astype(np.float64)
+        elif ch == "cov_resolved":
+            h[ch] = np.full(t, 8.0)
+        elif ch == "cov_errors":
+            h[ch] = RNG.binomial(8, 0.1, t).astype(np.float64)
+        elif ch == "queue":
+            h[ch] = RNG.integers(3, 7, t).astype(np.float64)
+        else:
+            h[ch] = 20.0 + RNG.normal(0.0, 1.0, t)
+    return h
+
+
+# ----------------------------------------------------------------------
+# detector primitives
+# ----------------------------------------------------------------------
+
+def test_ewma_matches_loop_reference():
+    x = RNG.normal(0, 1, 700)
+    alpha = 0.2
+    ref = np.empty_like(x)
+    ref[0] = x[0]
+    for i in range(1, x.size):
+        ref[i] = (1 - alpha) * ref[i - 1] + alpha * x[i]
+    np.testing.assert_allclose(ewma(x, alpha), ref, rtol=0, atol=1e-12)
+    np.testing.assert_array_equal(ewma(x, 1.0), x)   # alpha=1 is identity
+    with pytest.raises(ValueError):
+        ewma(x, 0.0)
+
+
+def test_rolling_sum_trailing_windows():
+    x = np.arange(6, dtype=float)
+    np.testing.assert_array_equal(rolling_sum(x, 3),
+                                  [3.0, 6.0, 9.0, 12.0])
+    with pytest.raises(ValueError):
+        rolling_sum(x, 0)
+
+
+def test_ewma_detect_step_fires_noise_does_not():
+    x = RNG.normal(10, 1, 600)
+    quiet = ewma_detect(x, threshold=12.0, warmup=64)
+    assert not quiet.fired
+    x2 = x.copy()
+    x2[300:] += 30.0                        # abrupt level jump
+    det = ewma_detect(x2, threshold=12.0, warmup=64, channel="used_cpu")
+    assert det.fired and det.channel == "used_cpu"
+    assert det.first_tick == 300            # caught on the jump tick
+    assert det.to_dict()["detector"] == "ewma"
+
+
+def test_ewma_detect_short_series_skips():
+    det = ewma_detect(np.ones(20), warmup=64)
+    assert not det.fired and det.n_ticks == 20 and det.n_alarms == 0
+
+
+def test_cusum_detect_drift_fires_stationary_does_not():
+    x = RNG.normal(10, 1, 800)
+    assert not cusum_detect(x, threshold=15.0, warmup=64).fired
+    x2 = x.copy()
+    x2[400:] += np.linspace(0, 4, 400)       # slow drift, no jump
+    det = cusum_detect(x2, threshold=15.0, warmup=64)
+    assert det.fired and det.first_tick > 400
+    # the drift is slow enough that per-tick residuals stay small: the
+    # EWMA chart must NOT see it (that's what CUSUM is for)
+    assert not ewma_detect(x2, threshold=12.0, warmup=64).fired
+
+
+def test_burst_detect_window_latency():
+    x = np.zeros(300)
+    x[100:110] = 2.0                        # 20 events in 10 ticks
+    det = burst_detect(x, threshold=8.0, window=16)
+    assert det.fired
+    assert 100 <= det.first_tick <= 100 + 16
+    assert not burst_detect(np.zeros(300), threshold=8.0, window=16).fired
+
+
+def test_coverage_drift_under_not_over():
+    t = 400
+    resolved = np.full(t, 8.0)
+    good = np.full(t, 0.8)                  # 10% errors at nominal 0.9
+    assert not coverage_drift_detect(resolved, good, nominal=0.9,
+                                     window=128).fired
+    bad = good.copy()
+    bad[200:] = 4.0                         # 50% errors from t=200
+    det = coverage_drift_detect(resolved, bad, nominal=0.9, window=128)
+    assert det.fired and det.first_tick >= 200
+    # over-coverage (zero errors) is conservative, never an alarm
+    assert not coverage_drift_detect(resolved, np.zeros(t),
+                                     nominal=0.9, window=128).fired
+
+
+def test_coverage_drift_clamps_and_skips_sparse():
+    # a run shorter than the window still evaluates (window clamps)
+    det = coverage_drift_detect(np.full(60, 8.0), np.full(60, 4.0),
+                                nominal=0.9, window=256, min_resolved=32)
+    assert det.fired
+    # windows with too few resolutions are skipped entirely
+    det = coverage_drift_detect(np.full(60, 0.1), np.full(60, 0.1),
+                                nominal=0.9, window=16, min_resolved=32)
+    assert det.n_alarms == 0
+
+
+def test_burn_rate_needs_both_windows():
+    t = 600
+    exposure = np.full(t, 4.0)
+    spike = np.zeros(t)
+    spike[300:308] = 4.0                    # short spike only
+    det = burn_rate_detect(spike, exposure, budget=0.05, threshold=4.0,
+                           window=32, long_window=256)
+    assert not det.fired                     # long window never burns
+    sustained = np.zeros(t)
+    sustained[300:] = 2.0                   # sustained 50% bad
+    det = burn_rate_detect(sustained, exposure, budget=0.05,
+                           threshold=4.0, window=32, long_window=256)
+    assert det.fired and det.first_tick >= 300
+    with pytest.raises(ValueError):
+        burn_rate_detect(spike, exposure, budget=0.0)
+
+
+# ----------------------------------------------------------------------
+# alert rules
+# ----------------------------------------------------------------------
+
+def test_alert_rule_validation():
+    with pytest.raises(ValueError, match="detector"):
+        AlertRule("x", "oom", "nope", threshold=1.0)
+    with pytest.raises(ValueError, match="severity"):
+        AlertRule("x", "oom", "burst", threshold=1.0, severity="meh")
+    # frozen + hashable like every config object
+    assert hash(AlertRule("x", "oom", "burst", threshold=1.0))
+
+
+def test_default_rules_quiet_on_stationary_history():
+    fired = evaluate_rules(_quiet_history(), registry=None)
+    assert fired == []
+
+
+def test_evaluate_rules_fires_and_counts():
+    h = _quiet_history()
+    h["oom"] = np.zeros(400)
+    h["oom"][200:210] = 2.0
+    reg = MetricsRegistry()
+    fired = evaluate_rules(h, registry=reg)
+    # an OOM storm both trips the burst watchdog and burns SLO budget
+    # (burn's bad series is fail + oom) — two pages, by design
+    assert [a["rule"] for a in fired] == ["oom-burst", "slo-burn"]
+    a = fired[0]
+    assert a["severity"] == "page" and a["channel"] == "oom"
+    assert 200 <= a["first_tick"] <= 216
+    snap = reg.snapshot()
+    key = 'alerts.fired{rule="oom-burst",severity="page"}'
+    assert snap[key]["value"] == 1.0
+    assert snap['alerts.fired{rule="slo-burn",severity="page"}']["value"] == 1.0
+    assert snap["alerts.evaluated"]["value"] == len(DEFAULT_RULES) - 1
+
+
+def test_evaluate_rules_skips_missing_channels():
+    fired = evaluate_rules({"queue": np.zeros(10)}, registry=None)
+    assert fired == []
+
+
+def test_tenant_burn_uses_class_budgets():
+    # tenant 0: best-effort (budget .25) at 50% misses -> burn 2.0
+    # tenant 1: premium (budget .02) at 50% misses -> burn 25 -> fires
+    tenancy = {"slo_met_frac": [0.5, 0.5, float("nan")],
+               "slo_class": [0, 2, 0]}
+    rule = AlertRule("tb", "slo_burn", "tenant_burn", threshold=4.0)
+    fired = evaluate_rules({}, (rule,), tenancy=tenancy, registry=None)
+    assert len(fired) == 1
+    assert fired[0]["tenant"] == 1 and fired[0]["slo_class"] == "premium"
+    assert fired[0]["peak_stat"] == pytest.approx(25.0)
+
+
+def test_write_alert_log_appends_jsonl(tmp_path):
+    path = tmp_path / "alerts.jsonl"
+    write_alert_log(str(path), [{"rule": "r1", "cell": "c1"}])
+    write_alert_log(str(path), [{"rule": "r2"}], cell="c2", run_id="x")
+    write_alert_log(str(path), [])               # no-op, creates nothing
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert len(lines) == 2
+    assert lines[0]["cell"] == "c1"              # record beats default
+    assert lines[1]["cell"] == "c2" and lines[1]["run_id"] == "x"
+
+
+# ----------------------------------------------------------------------
+# report helpers
+# ----------------------------------------------------------------------
+
+def test_obs_summary_zero_resolved_emits_no_nan():
+    h = {ch: np.zeros(8) for ch in CHANNELS}
+    s = obs_summary(h)
+    assert "coverage" not in s                   # no divide-by-zero NaN
+    assert not any(isinstance(v, float) and np.isnan(v)
+                   for v in s.values())
+
+
+def test_compact_history_preserves_event_totals():
+    h = {"oom": RNG.integers(0, 3, 1000).astype(np.float64),
+         "used_cpu": RNG.normal(20, 2, 1000)}
+    c = compact_history(h, max_points=100)
+    assert c["ticks"] == 1000 and c["stride"] == 10
+    assert len(c["channels"]["oom"]) == 100
+    # event channels bucket-SUM: run totals survive downsampling
+    assert sum(c["channels"]["oom"]) == pytest.approx(h["oom"].sum())
+    # level channels bucket-MEAN: stays in the data's range
+    assert 15 < min(c["channels"]["used_cpu"]) < 25
+    short = compact_history({"oom": np.ones(50)}, max_points=100)
+    assert short["stride"] == 1 and len(short["channels"]["oom"]) == 50
+    assert compact_history({}) == {"ticks": 0, "stride": 1,
+                                   "channels": {}}
+
+
+# ----------------------------------------------------------------------
+# metrics labels + prometheus exposition
+# ----------------------------------------------------------------------
+
+def test_labeled_metrics_are_distinct_series():
+    reg = MetricsRegistry()
+    reg.counter("alerts.fired", rule="a", severity="warn").inc()
+    reg.counter("alerts.fired", severity="warn", rule="a").inc()  # same
+    reg.counter("alerts.fired", rule="b", severity="page").inc(2)
+    snap = reg.snapshot()
+    assert snap['alerts.fired{rule="a",severity="warn"}']["value"] == 2.0
+    assert snap['alerts.fired{rule="b",severity="page"}']["value"] == 2.0
+    assert snap['alerts.fired{rule="a",severity="warn"}']["labels"] == \
+        {"rule": "a", "severity": "warn"}
+
+
+def test_textfile_help_type_once_per_family_and_escaping(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("alerts.fired", rule="r1", severity="warn").inc()
+    reg.counter("alerts.fired", rule='q"\\\n', severity="page").inc()
+    reg.set_help("alerts.fired", "fired alerts")
+    reg.histogram("compile.s", phase="jit").observe(1.0)
+    reg.histogram("compile.s", phase="run").observe(2.0)
+    path = tmp_path / "m.prom"
+    reg.write_textfile(str(path))
+    text = path.read_text()
+    # one HELP + one TYPE per family, not per series
+    assert text.count("# TYPE alerts_fired counter") == 1
+    assert text.count("# HELP alerts_fired fired alerts") == 1
+    assert text.count("# TYPE compile_s summary") == 1
+    # label values escaped per the exposition format
+    assert 'rule="q\\"\\\\\\n"' in text
+    assert 'compile_s_count{phase="jit"} 1' in text
+
+
+# ----------------------------------------------------------------------
+# span error flags + concurrency
+# ----------------------------------------------------------------------
+
+def test_span_records_error_flag_and_survives():
+    tr = Tracer()
+    with pytest.raises(KeyError):
+        with tr.span("boom", args={"k": 1}):
+            raise KeyError("x")
+    with tr.span("after"):                      # tracer state intact
+        pass
+    evs = {e["name"]: e for e in tr.events}
+    assert evs["boom"]["args"]["error"] == "KeyError"
+    assert evs["boom"]["args"]["k"] == 1        # caller args preserved
+    assert evs["boom"]["dur"] >= 0
+    assert "args" not in evs["after"]
+    assert validate_trace(tr.to_json()) == []
+
+
+def test_concurrent_spans_from_thread_pool_are_valid():
+    from concurrent.futures import ThreadPoolExecutor
+    tr = Tracer()
+    barrier = threading.Barrier(4)
+
+    def cell(i):
+        barrier.wait()                          # force real overlap
+        with tr.span(f"cell:{i}", cat="cell"):
+            if i == 2:
+                raise RuntimeError("boom")
+
+    with ThreadPoolExecutor(max_workers=4) as pool:
+        futs = [pool.submit(cell, i) for i in range(4)]
+        errs = [f.exception() for f in futs]
+    assert sum(e is not None for e in errs) == 1
+    assert len(tr.events) == 4
+    assert len({e["tid"] for e in tr.events}) > 1
+    flagged = [e for e in tr.events
+               if e.get("args", {}).get("error")]
+    assert len(flagged) == 1 and flagged[0]["name"] == "cell:2"
+    assert validate_trace(tr.to_json()) == []   # ts stays monotone
+
+
+# ----------------------------------------------------------------------
+# dashboard
+# ----------------------------------------------------------------------
+
+def _fake_manifest(alerts):
+    h = compact_history(_quiet_history(64))
+    return {
+        "run_id": "t", "engine": "scan", "wall_s": 1.0,
+        "metrics": {"ticks": {"type": "counter", "value": 3.0},
+                    "compile.s": {"type": "histogram", "count": 1,
+                                  "sum": 1.0, "min": 1.0, "max": 1.0}},
+        "alerts": alerts,
+        "cells": [],
+    }
+
+
+def test_render_dashboard_embeds_channels_and_alerts(tmp_path):
+    alerts = [{"rule": "oom-burst", "cell": "c0", "channel": "oom",
+               "detector": "burst", "severity": "page",
+               "peak_stat": 12.0, "threshold": 8.0,
+               "first_tick": 10, "last_tick": 20}]
+    man = _fake_manifest(alerts)
+    man["cells"] = [{"name": "c0",
+                     "obs": {"history":
+                             compact_history(_quiet_history(64))}}]
+    out = tmp_path / "report.html"
+    render_dashboard(man, str(out), results={"cells": man["cells"]},
+                     trace={"traceEvents": [
+                         {"name": "s", "cat": "x", "ph": "X", "ts": 0,
+                          "dur": 5.0, "pid": 1, "tid": 1}]},
+                     bench_docs={"BENCH_x.json":
+                                 {"criteria": {"ok": True, "bad": False}}})
+    html = out.read_text()
+    for ch in CHANNELS:
+        assert f">{ch}<" in html, f"channel {ch} missing"
+    assert "oom-burst" in html and "fired alerts" in html
+    assert "● page" in html                     # severity icon + label
+    assert "✓ pass" in html and "✗ FAIL" in html
+    assert "nan" not in html.lower().replace("tenan", "")
+
+
+def test_render_dashboard_from_files(tmp_path):
+    man = _fake_manifest([])
+    man["artifacts"] = {"results": "r.json"}
+    (tmp_path / "r.json").write_text(json.dumps(
+        {"cells": [{"name": "c0", "obs":
+                    {"history": compact_history(_quiet_history(32))}}]}))
+    mpath = tmp_path / "m.manifest.json"
+    mpath.write_text(json.dumps(man))
+    out = render_dashboard(str(mpath), str(tmp_path / "r.html"))
+    html = (tmp_path / "r.html").read_text()
+    assert out.endswith("r.html")
+    assert "no alerts fired" in html
+    assert html.count("<svg") >= len(CHANNELS)
+
+
+# ----------------------------------------------------------------------
+# sweep wiring (one tiny end-to-end grid)
+# ----------------------------------------------------------------------
+
+def test_run_grid_alerts_manifest_dashboard(tmp_path):
+    from repro.sim.sweep import quick_base_config, run_grid
+
+    out = tmp_path / "grid.json"
+    report = tmp_path / "report.html"
+    base = quick_base_config(n_apps=12, n_hosts=2, max_components=4)
+    smoke = AlertRule("smoke-admitted", "admitted", "burst",
+                      threshold=1.0, severity="info", window=8)
+    res = run_grid(base, {"policy": ["pessimistic"],
+                          "forecaster": ["persist"]},
+                   seeds=[0], engine="scan", obs=True,
+                   out_path=str(out), forecast_diag=False,
+                   alert_rules=(smoke,), dashboard_path=str(report))
+    rec = res.cells[0]
+    assert rec["obs"]["history"]["ticks"] == rec["obs"]["ticks"]
+    assert [a["rule"] for a in rec["obs"]["alerts"]] == ["smoke-admitted"]
+    man = load_manifest(str(tmp_path / "grid.manifest.json"), verify=True)
+    assert [a["rule"] for a in man["alerts"]] == ["smoke-admitted"]
+    assert man["artifacts"]["alerts"] == str(out)[:-5] + ".alerts.jsonl"
+    logged = [json.loads(ln) for ln in
+              open(man["artifacts"]["alerts"]).read().splitlines()]
+    assert logged and logged[0]["rule"] == "smoke-admitted"
+    html = report.read_text()
+    assert "smoke-admitted" in html
+    for ch in CHANNELS:
+        assert f">{ch}<" in html
