@@ -32,7 +32,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.forecast.base import Forecast
+from repro.core.forecast.base import Forecast, batched
 
 Array = jax.Array
 
@@ -213,8 +213,7 @@ class ARIMAForecaster:
 
     def forecast_batch(self, windows: Array, horizon: int, *,
                        valid: Array | None = None) -> Forecast:
-        if valid is None:
-            valid = jnp.ones(windows.shape, dtype=bool)
-        def fn(w, v):
-            return self.forecast(w, horizon, valid=v)
-        return jax.vmap(fn)(windows, valid)
+        # shared vmap wrapper (repro.core.forecast.base.batched): per-row
+        # independence is the contract the engines' bucketed/padded
+        # batch paths rely on, so there is exactly one batching idiom
+        return batched(self.forecast, windows, horizon, valid)

@@ -34,7 +34,8 @@ from repro.obs.dashboard import render_dashboard
 from repro.obs.manifest import (build_manifest, cell_hash, config_hash,
                                 load_manifest, write_manifest)
 from repro.obs.metrics import REGISTRY, MetricsRegistry
-from repro.obs.report import compact_history, masked_row_overhead, obs_summary
+from repro.obs.report import (bucketed_row_overhead, compact_history,
+                              masked_row_overhead, obs_summary)
 from repro.obs.timing import best_of, time_us
 from repro.obs.trace import (Tracer, current_tracer, span, tracing,
                              validate_trace)
@@ -46,7 +47,8 @@ __all__ = [
     "best_of", "time_us",
     "config_hash", "cell_hash", "build_manifest", "write_manifest",
     "load_manifest",
-    "masked_row_overhead", "obs_summary", "compact_history",
+    "masked_row_overhead", "bucketed_row_overhead",
+    "obs_summary", "compact_history",
     "Detection", "ewma_detect", "cusum_detect", "burst_detect",
     "coverage_drift_detect", "burn_rate_detect",
     "AlertRule", "DEFAULT_RULES", "evaluate_rules", "write_alert_log",

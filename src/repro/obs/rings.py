@@ -70,33 +70,50 @@ class ObsState:
     cursor: Array   # () i32
     f32: Array      # (len(F32_NAMES), R) f32, rows in F32_NAMES order
     i32: Array      # (len(I32_NAMES), R) i32, rows in I32_NAMES order
+    # leap engine only (None otherwise — structural absence, so uniform
+    # programs are unchanged): idle ticks skipped immediately BEFORE the
+    # tick recorded at each column.  Skipped ticks are provably all-zero
+    # on every channel (empty cluster, empty queue, quiescent
+    # calibration), so RingDrain re-expands them into zero history
+    # columns and leap histories stay bit-identical to uniform ones.
+    lead: Array | None = None
 
 
-def obs_init(cfg: ObsConfig, batch: int | None = None) -> ObsState:
+def obs_init(cfg: ObsConfig, batch: int | None = None,
+             leap: bool = False) -> ObsState:
     """Fresh rings (optionally with a leading cohort axis)."""
     B = () if batch is None else (batch,)
     R = int(cfg.ring)
     return ObsState(
         cursor=jnp.zeros(B, jnp.int32),
         f32=jnp.zeros(B + (len(F32_NAMES), R), jnp.float32),
-        i32=jnp.zeros(B + (len(I32_NAMES), R), jnp.int32))
+        i32=jnp.zeros(B + (len(I32_NAMES), R), jnp.int32),
+        lead=jnp.zeros(B + (R,), jnp.int32) if leap else None)
 
 
-def obs_record(obs: ObsState, active: Array, values: dict) -> ObsState:
+def obs_record(obs: ObsState, active: Array, values: dict,
+               lead: Array | None = None) -> ObsState:
     """Write one tick's values at ``cursor % R`` (one-hot masked update —
     no scatter: XLA CPU serializes scatters under vmap).  Gated on
     ``active`` exactly like ``TickMetrics.valid``, so padding ticks
-    after global completion record nothing."""
+    after global completion record nothing.  ``lead`` (leap engine) is
+    stored alongside the column when the state carries a lead ring."""
     R = obs.f32.shape[-1]
     oh = (jnp.arange(R) == obs.cursor % R) & active
     vf = jnp.stack([jnp.asarray(values[n], jnp.float32)
                     for n in F32_NAMES])
     vi = jnp.stack([jnp.asarray(values[n], jnp.int32)
                     for n in I32_NAMES])
+    lead_ring = obs.lead
+    if lead_ring is not None:
+        lead_val = (jnp.zeros((), jnp.int32) if lead is None
+                    else jnp.asarray(lead, jnp.int32))
+        lead_ring = jnp.where(oh, lead_val, obs.lead)
     return ObsState(
         cursor=obs.cursor + active.astype(jnp.int32),
         f32=jnp.where(oh, vf[:, None], obs.f32),
-        i32=jnp.where(oh, vi[:, None], obs.i32))
+        i32=jnp.where(oh, vi[:, None], obs.i32),
+        lead=lead_ring)
 
 
 class RingDrain:
@@ -118,6 +135,8 @@ class RingDrain:
         R = np.asarray(h.f32).shape[-1]
         f32 = np.asarray(h.f32).reshape(-1, len(F32_NAMES), R)
         i32 = np.asarray(h.i32).reshape(-1, len(I32_NAMES), R)
+        lead = (None if h.lead is None
+                else np.asarray(h.lead, np.int64).reshape(-1, R))
         if self._parts is None:
             self._drained = np.zeros_like(cur)
             self._parts = [{name: [] for name, _ in RING_FIELDS}
@@ -132,10 +151,27 @@ class RingDrain:
                     f"last drain exceeds capacity {R} (keep chunk <= "
                     "SimConfig.obs.ring)")
             idx = (self._drained[m] + np.arange(n)) % R
+            pos = None
+            if lead is not None:
+                # leap engine: expand each column into its `lead`
+                # skipped (all-zero) ticks followed by the recorded tick
+                reps = lead[m, idx] + 1
+                pos = np.cumsum(reps) - 1
+                n = int(reps.sum())
             for j, name in enumerate(F32_NAMES):
-                self._parts[m][name].append(f32[m, j, idx])
+                col = f32[m, j, idx]
+                if pos is not None:
+                    out = np.zeros(n, col.dtype)
+                    out[pos] = col
+                    col = out
+                self._parts[m][name].append(col)
             for j, name in enumerate(I32_NAMES):
-                self._parts[m][name].append(i32[m, j, idx])
+                col = i32[m, j, idx]
+                if pos is not None:
+                    out = np.zeros(n, col.dtype)
+                    out[pos] = col
+                    col = out
+                self._parts[m][name].append(col)
         self._drained = cur.copy()
 
     def history(self, member: int = 0) -> dict:

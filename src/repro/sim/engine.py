@@ -96,6 +96,22 @@ class SimConfig:
     arima: ARIMAConfig = ARIMAConfig()
     max_ticks: int = 100_000
     work_lost_on_kill: bool = True       # kill primitive loses all work
+    # event-driven leap ticks (scan/shard engines only; the host engines
+    # ignore it): each scan step first skips a run of provably-idle
+    # ticks — empty cluster, empty queue, quiescent calibration — with a
+    # cheap clock loop that replays the uniform engine's exact f32 time
+    # accumulation, then executes one real tick.  Bit-identical to
+    # leap=False (uniform stays the reference; tests/test_scan_engine.py
+    # enforces the equivalence across all scenario families).
+    leap: bool = False
+    # ragged bucketed forecast batching (scan/shard engines, gp/arima):
+    # compact forecast-ready monitor rows and run the model over
+    # power-of-two buckets sized per chunk instead of the full padded
+    # batch (the measured ~6.7x masked-row overhead).  One jit cache
+    # entry per bucket, mirroring forecast_peaks' host-side padding;
+    # per-row model independence makes it bit-identical, so it defaults
+    # on.
+    forecast_bucket: bool = True
 
 
 # power-of-two padding for every jitted batch path (the shared

@@ -25,6 +25,14 @@ devices::
 Cells whose static config is unique in the grid (singleton fleets)
 fall back to solo scan runs — a one-member SPMD program would only pay
 mesh-placement overhead for nothing.
+
+The leap engine (``SimConfig.leap``) and ragged forecast bucketing
+(``SimConfig.forecast_bucket``) compose with sharding for free: both
+are plain config fields, so they participate in fleet grouping like
+any other static knob (cells may only share a program when they agree
+on them), and the per-chunk bucket choice is made once per fleet from
+the gathered host snapshot — every mesh slice runs the same bucket
+program.  ``shard(mesh=k) == scan`` holds under both flags.
 """
 from __future__ import annotations
 

@@ -185,7 +185,8 @@ def init_state(cfg, n_apps: int, max_components: int,
         calib = calib_init(2 * A * C, cfg.calibration, batch=batch,
                            n_groups=(cfg.control.max_tenants
                                      if cfg.control.enabled else 0))
-    obs = obs_init(cfg.obs, batch=batch) if cfg.obs.enabled else None
+    obs = (obs_init(cfg.obs, batch=batch, leap=cfg.leap)
+           if cfg.obs.enabled else None)
     return SimState(
         slot_gid=jnp.full(B + (A,), -1, jnp.int32),
         work_done=zf(A), comp_running=zb(A, C), comp_host=zi(A, C),
@@ -218,10 +219,20 @@ class TickMetrics:
     alloc_cpu: Array   # () f32 cluster-total committed allocation
     alloc_mem: Array   # () f32
     # forecast-load telemetry: rows past the grace period this tick (the
-    # rows a compacting forecaster would NEED; the scan engine computes
-    # the full padded batch, so ready/batch is the masked-rows overhead
-    # the ROADMAP asks to measure before GP cohorts run at scale)
+    # rows a compacting forecaster would NEED; the full-batch scan path
+    # computes the whole padded batch, so ready/batch is the masked-rows
+    # overhead the bucketed path exists to close)
     forecast_rows: Array  # () i32
+    # rows the forecast MODEL actually computed this tick: the full
+    # padded batch when it ran un-bucketed, passes x bucket batch under
+    # ragged bucketing, 0 for persist/oracle (no model call)
+    forecast_rows_done: Array  # () i32
+    # event-leap telemetry: provably-idle ticks the leap engine skipped
+    # immediately BEFORE this step's tick (always 0 under the uniform
+    # engine).  drain_results re-expands each step into `lead` all-zero
+    # ticks followed by the executed tick, so leap histories are
+    # bit-identical to uniform ones.
+    lead: Array        # () i32
 
 
 def drain_results(cfg, wl, state: SimState, metrics: TickMetrics,
@@ -235,14 +246,31 @@ def drain_results(cfg, wl, state: SimState, metrics: TickMetrics,
     ``summary()`` so telemetry can never perturb equivalence checks)."""
     res = SimResults(n_apps=int(wl.n_apps))
     valid = np.asarray(metrics.valid)
-    res.n_running = [int(v) for v in np.asarray(metrics.n_running)[valid]]
+    # Re-expand leap steps into per-tick histories: each step stands for
+    # `lead` skipped idle ticks (all-zero telemetry by the leap guard —
+    # empty cluster, empty queue, quiescent calibration) followed by one
+    # executed tick when `valid`.  Under the uniform engine lead == 0
+    # everywhere and this reduces to plain valid-masking, so the two
+    # modes produce bit-identical results.
+    lead = np.asarray(metrics.lead, np.int64)
+    reps = lead + valid.astype(np.int64)
+    pos = np.cumsum(reps) - 1
+    T = int(reps.sum())
+
+    def expand(x):
+        x = np.asarray(x)
+        out = np.zeros(T, x.dtype)
+        out[pos[valid]] = x[valid]
+        return out
+
+    res.n_running = [int(v) for v in expand(metrics.n_running)]
     H = cfg.cluster.n_hosts
     cap_cpu = np.float32(H) * np.float32(cfg.cluster.host_cpu)
     cap_mem = np.float32(H) * np.float32(cfg.cluster.host_mem)
-    used_c = np.asarray(metrics.used_cpu)[valid]
-    used_m = np.asarray(metrics.used_mem)[valid]
-    alloc_c = np.asarray(metrics.alloc_cpu)[valid]
-    alloc_m = np.asarray(metrics.alloc_mem)[valid]
+    used_c = expand(metrics.used_cpu)
+    used_m = expand(metrics.used_mem)
+    alloc_c = expand(metrics.alloc_cpu)
+    alloc_m = expand(metrics.alloc_mem)
     res.util_cpu = list(used_c / cap_cpu)
     res.util_mem = list(used_m / cap_mem)
     res.slack_cpu = [float((a - u) / a) if a > 0 else 0.0
@@ -262,13 +290,14 @@ def drain_results(cfg, wl, state: SimState, metrics: TickMetrics,
     # forecast-load telemetry (scan-engine only; see TickMetrics): how
     # many rows were ready vs the full padded batch the program computes
     if cfg.policy != "baseline" and cfg.forecaster != "oracle":
-        rows = np.asarray(metrics.forecast_rows)[valid]
+        rows = expand(metrics.forecast_rows)
         AC = state.mon_count.shape[-1]
         res.forecast_rows = {
             "rows_ready": int(rows.sum()),
             "rows_batch": 2 * AC,
+            "rows_bucketed": int(expand(metrics.forecast_rows_done).sum()),
             "ticks_forecasting": int((rows > 0).sum()),
-            "ticks": int(valid.sum()),
+            "ticks": T,
         }
     if obs is not None:
         res.obs = obs

@@ -61,14 +61,14 @@ from repro.core.shaper.safeguard import (shaped_demand_raw,
 from repro.core.uncertainty.online import (calib_begin, calib_observe,
                                            calib_scales)
 from repro.obs import REGISTRY, span
-from repro.obs.rings import RingDrain, obs_record
+from repro.obs.rings import RING_FIELDS, RingDrain, obs_record
 from repro.sim.metrics import SimResults
 from repro.sim.state import (CPU, MEM, DeviceTrace, SimState, TickMetrics,
                              drain_results, init_state, round_up)
 
 Array = jax.Array
 
-__all__ = ["fused_tick", "run_sim_scan", "run_cohort_scan",
+__all__ = ["fused_tick", "fused_leap", "run_sim_scan", "run_cohort_scan",
            "run_fleet_shard", "FLEET_AXIS"]
 
 # mesh axis name for sharded fleets (repro.sim.shard lays grid cells x
@@ -224,10 +224,77 @@ def _oracle_peaks(tr: DeviceTrace, st: SimState, horizon: int,
     return peaks
 
 
+def _bucketed_forecast(cfg, model, wins: Array, valid: Array,
+                       ready: Array, bucket: int):
+    """gp/arima forecast over the READY monitor rows only, in
+    power-of-two buckets of ``bucket`` rows per resource (the model
+    batch is ``2 * bucket``: CPU rows stacked over MEM rows, exactly
+    like the full-batch path).
+
+    Static shapes under jit forbid true compaction, so the ready rows
+    are compacted by a stable argsort and consumed in
+    ``ceil(n_ready / bucket)`` gather -> model -> scatter-back passes of
+    one ``lax.while_loop`` — zero passes on idle ticks, and within-chunk
+    ready growth past the driver's chunk-boundary bucket choice is
+    absorbed by extra passes, never wrong results.  Per-row model
+    independence (the property ``engine.forecast_peaks`` documents as
+    "bit-identical across bucket sizes") makes every ready row's
+    (mean, var) bit-identical to the full-batch path; non-ready rows
+    come back 0, which downstream masking (``ready2`` in
+    ``_shaped_demands``, ``deploy`` in ``calib_begin``) never reads.
+    The scatter-back is a one-hot matmul, not ``.at[].set`` — XLA CPU
+    scatters serialize under the cohort vmap.
+
+    Returns (mean, var, n_pass), each over the full ``(2 * AC,)`` row
+    space; ``n_pass * 2 * bucket`` is the rows the model actually
+    computed (the ``rows_bucketed`` telemetry).
+    """
+    AC = ready.shape[0]
+    B = bucket
+    # ready rows first (stable argsort), padded up to a multiple of B
+    # with out-of-range sentinels so dynamic_slice never clamps a pass
+    # start back over rows an earlier pass already wrote
+    order = jnp.argsort(~ready).astype(jnp.int32)
+    pad = round_up(AC, B) - AC
+    if pad:
+        order = jnp.concatenate([order, jnp.zeros((pad,), jnp.int32)])
+    n_ready = ready.sum().astype(jnp.int32)
+    cols = jnp.arange(AC)
+
+    def cond(carry):
+        return carry[0] * B < n_ready
+
+    def body(carry):
+        p, mean, var = carry
+        idx = jax.lax.dynamic_slice(order, (p * B,), (B,))
+        in_pass = (jnp.arange(B) + p * B) < n_ready
+        w2 = jnp.concatenate([wins[idx], wins[idx + AC]])
+        v2 = jnp.concatenate([valid[idx], valid[idx + AC]])
+        fc = model.forecast_batch(w2, cfg.horizon, valid=v2)
+        peak, pvar = peak_over_horizon(fc)
+        peak = peak.astype(jnp.float32)
+        pvar = pvar.astype(jnp.float32)
+        # one-hot scatter-back: each ready row appears in exactly one
+        # pass (argsort is a permutation; the sentinel tail is masked),
+        # so each output element is one value plus exact zeros
+        oh = ((idx[:, None] == cols[None, :])
+              & in_pass[:, None]).astype(jnp.float32)      # (B, AC)
+        mean = mean + jnp.concatenate([peak[:B] @ oh, peak[B:] @ oh])
+        var = var + jnp.concatenate([pvar[:B] @ oh, pvar[B:] @ oh])
+        return p + 1, mean, var
+
+    z = jnp.zeros((2 * AC,), jnp.float32)
+    n_pass, mean, var = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), z, z))
+    return mean, var, n_pass
+
+
 def _shaped_demands(cfg, model, tr: DeviceTrace, st: SimState,
-                    tick: float) -> tuple[Array, SimState, Array]:
-    """(A, C, 2) shaped demand table, updated calib state, and the
-    number of forecast rows actually past the grace period this tick.
+                    tick: float, bucket: int | None = None
+                    ) -> tuple[Array, SimState, Array, Array]:
+    """(A, C, 2) shaped demand table, updated calib state, the number of
+    forecast rows actually past the grace period this tick, and the rows
+    the forecast model computed for them (0 for persist/oracle).
 
     Mirrors ``engine._shape_decisions``'s demand construction: running
     components default to their reservation; components past the grace
@@ -245,26 +312,33 @@ def _shaped_demands(cfg, model, tr: DeviceTrace, st: SimState,
         shaped = shaped_demand_raw(peaks, req, jnp.zeros_like(peaks),
                                    cfg.safeguard)
         return (jnp.where(run[:, :, None], shaped, demand), st,
-                jnp.int32(0))
+                jnp.int32(0), jnp.int32(0))
 
-    # forecast over EVERY monitor row (CPU rows then MEM rows); rows not
+    # forecast over the monitor rows (CPU rows then MEM rows); rows not
     # past the grace period are masked out of the demand afterwards.
-    # Shapes are static under jit, so per-row compaction is impossible —
-    # but the MODEL call (gp/arima, the expensive path) is gated on any
-    # row being ready at all, which skips the model entirely during
-    # warm-up/grace ticks and after global completion.  The gate only
-    # helps solo (non-vmapped) programs: under a cohort vmap the cond
-    # lowers to a select and both branches execute — that residual
-    # masked-rows overhead is what ``forecast_rows`` telemetry measures
-    # (surfaced as the gp block of BENCH_engine.json).
+    # Shapes are static under jit, so per-row compaction needs the
+    # bucketed path: with ``bucket`` set (the driver's per-chunk choice)
+    # the gp/arima model runs only over the ready rows, in
+    # ceil(ready / bucket) passes of a fixed-shape batch.  Un-bucketed,
+    # the MODEL call is gated on any row being ready at all, which skips
+    # the model during warm-up/grace ticks and after global completion —
+    # but the gate only helps solo (non-vmapped) programs: under a
+    # cohort vmap the cond lowers to a select and both branches execute.
+    # The ready/computed gap either way is what the ``forecast_rows``
+    # telemetry measures (the gp block of BENCH_engine.json).
     W = st.mon_buf.shape[1]
     ready = run.reshape(AC) & (st.mon_count >= cfg.grace)
     wins = jnp.concatenate([st.mon_buf[:, :, CPU], st.mon_buf[:, :, MEM]])
     age = jnp.arange(W)[None, :]
     vrow = age >= (W - jnp.minimum(st.mon_count, W))[:, None]
     valid = jnp.concatenate([vrow, vrow])
+    fc_done = jnp.int32(0)
     if cfg.forecaster == "persist":
         mean, var = persistence_peak(wins, valid)
+    elif bucket is not None:
+        mean, var, n_pass = _bucketed_forecast(
+            cfg, model, wins, valid, ready, bucket)
+        fc_done = n_pass * jnp.int32(2 * bucket)
     else:
         def _model(args):
             w, v = args
@@ -277,6 +351,7 @@ def _shaped_demands(cfg, model, tr: DeviceTrace, st: SimState,
             return z, z
 
         mean, var = jax.lax.cond(ready.any(), _model, _skip, (wins, valid))
+        fc_done = jnp.where(ready.any(), jnp.int32(2 * AC), jnp.int32(0))
 
     req_rows = jnp.concatenate([req[:, :, CPU].reshape(AC),
                                 req[:, :, MEM].reshape(AC)])
@@ -322,7 +397,7 @@ def _shaped_demands(cfg, model, tr: DeviceTrace, st: SimState,
     ready_tbl = ready.reshape(A, C)
     fc_rows = 2 * ready.sum().astype(jnp.int32)
     return (jnp.where(ready_tbl[:, :, None], shaped_tbl, demand), st,
-            fc_rows)
+            fc_rows, fc_done)
 
 
 def _shape_problem(cfg, tr: DeviceTrace, st: SimState, demand: Array,
@@ -640,13 +715,20 @@ def _place_missing_elastic(tr: DeviceTrace, st: SimState, t: Array,
 # the fused tick
 # ----------------------------------------------------------------------
 
-def fused_tick(cfg, model, tr: DeviceTrace,
-               st: SimState) -> tuple[SimState, TickMetrics]:
+def fused_tick(cfg, model, tr: DeviceTrace, st: SimState,
+               bucket: int | None = None,
+               lead: Array | None = None) -> tuple[SimState, TickMetrics]:
     """One simulation tick as a pure function (cfg and model static).
 
     Phase order is exactly ``engine.run_sim``'s loop body; the whole
     body is gated on ``active`` (some app unfinished AND the tick budget
     not exhausted) so post-completion scan padding is a no-op.
+
+    ``bucket`` (static, from the driver's per-chunk choice) routes the
+    gp/arima forecast through :func:`_bucketed_forecast`; ``lead`` is
+    the leap engine's skipped-idle-tick count for this step, threaded
+    into the tick's telemetry (metrics + obs ring) so histories can be
+    re-expanded on the host.
     """
     A, C = st.comp_running.shape
     H = cfg.cluster.n_hosts
@@ -725,9 +807,10 @@ def fused_tick(cfg, model, tr: DeviceTrace,
     # The engine skips this phase when no slot is occupied; here an
     # empty slot table makes every sub-step a no-op (empty kill masks,
     # all-zero allocations over an all-zero table), so no gate is needed.
-    fc_rows = jnp.int32(0)
+    fc_rows = fc_done = jnp.int32(0)
     if cfg.policy != "baseline":
-        demand, st, fc_rows = _shaped_demands(cfg, model, tr, st, tick)
+        demand, st, fc_rows, fc_done = _shaped_demands(
+            cfg, model, tr, st, tick, bucket)
         if rec:
             obs_dem = demand.sum((0, 1))     # (2,) shaped-demand totals
         prob = _shape_problem(cfg, tr, st, demand, t, host_cap)
@@ -806,7 +889,8 @@ def fused_tick(cfg, model, tr: DeviceTrace,
         n_running=(st.slot_gid >= 0).sum().astype(jnp.int32),
         used_cpu=used[CPU], used_mem=used[MEM],
         alloc_cpu=alloc[CPU], alloc_mem=alloc[MEM],
-        forecast_rows=fc_rows)
+        forecast_rows=fc_rows, forecast_rows_done=fc_done,
+        lead=jnp.int32(0) if lead is None else lead)
 
     if rec:
         zero = jnp.int32(0)
@@ -828,10 +912,71 @@ def fused_tick(cfg, model, tr: DeviceTrace,
                              if cres0 is not None else zero),
             "cov_errors": (st.calib.errors - cerr0
                            if cerr0 is not None else zero),
-        }))
+        }, lead=lead))
 
     st = dataclasses.replace(st, t=jnp.where(active, t, t_prev))
     return st, metrics
+
+
+def fused_leap(cfg, model, tr: DeviceTrace, st: SimState, left: Array,
+               bucket: int | None = None
+               ) -> tuple[SimState, Array, TickMetrics]:
+    """One EVENT-DRIVEN leap step: skip a run of provably-idle ticks,
+    then execute one real :func:`fused_tick`.
+
+    A tick is provably idle — every phase of the uniform step a no-op —
+    when the cluster is empty, the FIFO queue is empty, calibration has
+    no pending predictions (``CalibState.left`` ages per executed tick,
+    so outstanding scores must run, not leap) and the next arrival is
+    still in the future.  Tenancy needs no guard: with zero events
+    ``credit_step`` is an identity and every counter increments by zero.
+    The skip itself is a scalar ``while_loop`` that replays the uniform
+    engine's EXACT ``t + tick`` float32 accumulation (~3 scalar ops per
+    skipped tick instead of a full fused tick), so arrival tick indices
+    — and therefore all downstream results — are bit-identical for any
+    tick value.  Under a cohort vmap each member skips its own idle
+    spans: a chunk costs ~max(per-member non-idle ticks) steps.
+
+    ``left`` is the member's remaining tick budget (the driver seeds it
+    with ``max_ticks``); it caps the skip and gates the executed tick,
+    replacing the uniform driver's last-chunk slicing.  Budget-truncated
+    idle tails still record their skipped ticks (metrics ``lead`` /
+    a zero obs column) so truncated histories match uniform ones.
+
+    Returns (state, left', metrics): ``left' = left - lead - executed``.
+    """
+    tick_f = jnp.float32(cfg.cluster.tick)
+    active = ~st.done.all() & (left > 0)
+    idle = active & (st.slot_gid < 0).all() & ~st.queued.any()
+    if st.calib is not None:
+        idle = idle & (st.calib.left == 0).all()
+    next_sub = jnp.min(jnp.where(st.arrived, jnp.inf, tr.submit))
+
+    def wcond(carry):
+        t_c, n = carry
+        return idle & (n < left) & (next_sub > t_c + tick_f)
+
+    def wbody(carry):
+        t_c, n = carry
+        return t_c + tick_f, n + 1
+
+    t2, lead = jax.lax.while_loop(wcond, wbody, (st.t, jnp.int32(0)))
+    st = dataclasses.replace(st, t=t2)
+    run = active & (left - lead > 0)
+    # the tick always executes (a vmapped cond would lower to a select
+    # and run both branches anyway) and is discarded when the budget
+    # ran out; `run` implies the tick's own `active` gate
+    st2, m = fused_tick(cfg, model, tr, st, bucket=bucket, lead=lead)
+    st = jax.tree.map(lambda a, b: jnp.where(run, a, b), st2, st)
+    m = dataclasses.replace(m, valid=m.valid & run, lead=lead)
+    if st.obs is not None:
+        # budget exhausted mid-skip: the skipped ticks still happened —
+        # record them as one zero column standing for `lead` idle ticks
+        tail = ~run & (lead > 0)
+        st = dataclasses.replace(st, obs=obs_record(
+            st.obs, tail, {name: 0 for name, _ in RING_FIELDS},
+            lead=lead - 1))
+    return st, left - lead - run.astype(jnp.int32), m
 
 
 # ----------------------------------------------------------------------
@@ -849,7 +994,8 @@ def _cfg_key(cfg):
     cells across scenarios share compilations)."""
     return (cfg.cluster, cfg.policy, cfg.forecaster, cfg.safeguard,
             cfg.calibration, cfg.control, cfg.obs, cfg.window, cfg.grace,
-            cfg.horizon, cfg.gp, cfg.arima, cfg.work_lost_on_kill)
+            cfg.horizon, cfg.gp, cfg.arima, cfg.work_lost_on_kill,
+            cfg.leap, cfg.forecast_bucket)
 
 
 _CHUNK_CACHE: dict = {}
@@ -908,21 +1054,51 @@ def _timed_first_call(fn, metric: str):
     return wrapped
 
 
-def _chunk_fn(cfg, chunk: int, shapes, cohort: bool):
-    key = (_cfg_key(cfg), chunk, shapes, cohort)
+def _chunk_body(cfg, model, chunk: int, bucket):
+    """The (un-vmapped) chunk step body: a ``lax.scan`` over
+    :func:`fused_tick` (uniform) or :func:`fused_leap` (the tick budget
+    then rides in the carry)."""
+    if cfg.leap:
+        def run_chunk(tr, st, left):
+            def body(carry, _):
+                s, l, m = fused_leap(cfg, model, tr, *carry, bucket=bucket)
+                return (s, l), m
+            (st, left), ms = jax.lax.scan(body, (st, left), None,
+                                          length=chunk)
+            return st, left, ms
+        return run_chunk, (1, 2)
+
+    def run_chunk(tr, st):
+        def body(s, _):
+            return fused_tick(cfg, model, tr, s, bucket=bucket)
+        return jax.lax.scan(body, st, None, length=chunk)
+    return run_chunk, (1,)
+
+
+# distinct (cfg-key, bucket) jit-cache entries created by the bucketed
+# forecast path — surfaced as a registry gauge so bucket proliferation
+# (compile cost) is observable in manifests and the engine bench
+_BUCKET_JIT_KEYS: set = set()
+
+
+def _note_bucket_entry(key) -> None:
+    _BUCKET_JIT_KEYS.add(key)
+    REGISTRY.gauge("scan.bucket_cache_entries").set(len(_BUCKET_JIT_KEYS))
+
+
+def _chunk_fn(cfg, chunk: int, shapes, cohort: bool,
+              bucket: int | None = None):
+    key = (_cfg_key(cfg), chunk, shapes, cohort, bucket)
     fn = _CHUNK_CACHE.get(key)
     if fn is None:
         model = _make_model(cfg)
-
-        def run_chunk(tr, st):
-            def body(s, _):
-                return fused_tick(cfg, model, tr, s)
-            return jax.lax.scan(body, st, None, length=chunk)
-
+        run_chunk, donate = _chunk_body(cfg, model, chunk, bucket)
         if cohort:
             run_chunk = jax.vmap(run_chunk)
         fn = _CHUNK_CACHE[key] = _timed_first_call(
-            jax.jit(run_chunk, donate_argnums=(1,)), "scan.compile_s")
+            jax.jit(run_chunk, donate_argnums=donate), "scan.compile_s")
+        if bucket is not None:
+            _note_bucket_entry(key)
     return fn
 
 
@@ -938,33 +1114,77 @@ def _concat_metrics(parts: list, axis: int = 0) -> TickMetrics:
     return jax.tree.map(lambda *xs: np.concatenate(xs, axis=axis), *host)
 
 
+# smallest forecast bucket, in monitor rows per resource (the model
+# batch is 2x this: CPU + MEM rows): small enough that mostly-idle
+# tables pay little, large enough to bound the distinct compilations
+# per config at log2(AC / _BUCKET_MIN)
+_BUCKET_MIN = 8
+
+
+def _bucketed(cfg) -> bool:
+    """Does this config route forecasts through the bucketed path?"""
+    return (cfg.forecast_bucket and cfg.policy != "baseline"
+            and cfg.forecaster in ("gp", "arima"))
+
+
+def _pick_bucket(cfg, st) -> int | None:
+    """Per-chunk bucket choice: the smallest power-of-two (>= the floor)
+    covering the CURRENT max ready-row count across members, read on the
+    host at the chunk boundary (where the driver syncs anyway).  Ready
+    growth within the chunk is absorbed by extra ``_bucketed_forecast``
+    passes, not a bigger bucket, so the choice affects performance only
+    — never results.  ``None`` (the full-batch path) when the bucket
+    would cover the whole table anyway."""
+    mc = np.asarray(st.mon_count)
+    AC = mc.shape[-1]
+    run = ((np.asarray(st.slot_gid) >= 0)[..., None]
+           & np.asarray(st.comp_running)).reshape(mc.shape)
+    n = int((run & (mc >= cfg.grace)).sum(-1).max())
+    b = _BUCKET_MIN
+    while b < n:
+        b *= 2
+    if b >= AC:
+        return None
+    REGISTRY.counter("forecast.bucket_chunks", bucket=str(2 * b)).inc()
+    REGISTRY.histogram("forecast.bucket_occupancy",
+                       bucket=str(2 * b)).observe(n / b)
+    return b
+
+
+def _ring_drain(cfg, chunk: int, st):
+    if st.obs is None:
+        return None
+    if chunk > cfg.obs.ring:
+        raise ValueError(
+            f"chunk={chunk} exceeds the telemetry ring capacity "
+            f"{cfg.obs.ring}: rings are drained once per chunk, so "
+            "undrained ticks would be overwritten (raise "
+            "SimConfig.obs.ring or shrink the chunk)")
+    return RingDrain()
+
+
 def _drive_chunks(cfg, chunk: int, fn_for_size, tr, st):
     """Run chunks until every sim is done or the tick budget is spent.
 
-    ``fn_for_size(size)`` returns the compiled chunk step (the scan and
-    shard engines differ only in this factory).  The budget is enforced
-    by slicing the LAST chunk to exactly the remaining ticks (one extra
-    compile at most): the step itself gates only on completion, so a
-    truncated sim must never execute a tick past ``max_ticks``.
+    ``fn_for_size(size, bucket)`` returns the compiled chunk step (the
+    scan and shard engines differ only in this factory); ``bucket`` is
+    re-chosen at every chunk boundary from the live ready-row count.
+    The budget is enforced by slicing the LAST chunk to exactly the
+    remaining ticks (one extra compile at most): the step itself gates
+    only on completion, so a truncated sim must never execute a tick
+    past ``max_ticks``.
 
     When telemetry rings are present the host drains them at every
     chunk boundary (returned ``RingDrain``; ``None`` when obs is off),
     which is why ring capacity must cover a whole chunk.
     """
-    drain = None
-    if st.obs is not None:
-        if chunk > cfg.obs.ring:
-            raise ValueError(
-                f"chunk={chunk} exceeds the telemetry ring capacity "
-                f"{cfg.obs.ring}: rings are drained once per chunk, so "
-                "undrained ticks would be overwritten (raise "
-                "SimConfig.obs.ring or shrink the chunk)")
-        drain = RingDrain()
+    drain = _ring_drain(cfg, chunk, st)
+    bucketing = _bucketed(cfg)
     parts = []
     remaining = cfg.max_ticks
     while remaining > 0:
         size = min(chunk, remaining)
-        fn = fn_for_size(size)
+        fn = fn_for_size(size, _pick_bucket(cfg, st) if bucketing else None)
         with span("chunk", cat="execute", args={"ticks": size}):
             st, ms = fn(tr, st)
         parts.append(ms)
@@ -975,6 +1195,32 @@ def _drive_chunks(cfg, chunk: int, fn_for_size, tr, st):
         # np.asarray, not st.done.all(): the fleet state is sharded
         # across devices and the host-side gather is the cheap form
         if bool(np.asarray(st.done).all()):
+            break
+    return st, parts, drain
+
+
+def _drive_chunks_leap(cfg, chunk: int, fn_for_size, tr, st):
+    """Leap-mode chunk driver.  A leap step consumes a VARIABLE number
+    of ticks, so the host cannot enforce ``max_ticks`` by slicing the
+    last chunk; instead the per-member budget rides in the scan carry
+    (seeded here, decremented by skipped + executed ticks inside
+    :func:`fused_leap`) and every chunk runs the full ``chunk`` steps —
+    one compiled size, no last-chunk recompile.  Termination is per
+    member: done, or budget spent."""
+    drain = _ring_drain(cfg, chunk, st)
+    bucketing = _bucketed(cfg)
+    left = jnp.full(st.t.shape, cfg.max_ticks, jnp.int32)
+    parts = []
+    while True:
+        fn = fn_for_size(chunk, _pick_bucket(cfg, st) if bucketing else None)
+        with span("chunk", cat="execute", args={"ticks": chunk}):
+            st, left, ms = fn(tr, st, left)
+        parts.append(ms)
+        if drain is not None:
+            with span("ring_drain", cat="drain"):
+                drain.drain(st.obs)
+        done = np.asarray(st.done)
+        if bool(np.all(done.all(axis=-1) | (np.asarray(left) <= 0))):
             break
     return st, parts, drain
 
@@ -992,8 +1238,10 @@ def run_sim_scan(cfg, wl=None, *, chunk: int = 32) -> SimResults:
     tr = _device_trace([wl], batched=False)
     st = init_state(cfg, wl.n_apps, wl.max_components)
     shapes = _shapes_key(wl, cfg)
-    st, parts, drain = _drive_chunks(
-        cfg, chunk, lambda size: _chunk_fn(cfg, size, shapes, False),
+    driver = _drive_chunks_leap if cfg.leap else _drive_chunks
+    st, parts, drain = driver(
+        cfg, chunk,
+        lambda size, bucket: _chunk_fn(cfg, size, shapes, False, bucket),
         tr, st)
     return drain_results(
         cfg, wl, st, _concat_metrics(parts),
@@ -1030,8 +1278,10 @@ def run_cohort_scan(cfg, seeds, *, chunk: int = 32,
     st = init_state(cfg, wls[0].n_apps, wls[0].max_components,
                     batch=len(seeds))
     shapes = _shapes_key(wls[0], cfg)
-    st, parts, drain = _drive_chunks(
-        cfg, chunk, lambda size: _chunk_fn(cfg, size, shapes, True),
+    driver = _drive_chunks_leap if cfg.leap else _drive_chunks
+    st, parts, drain = driver(
+        cfg, chunk,
+        lambda size, bucket: _chunk_fn(cfg, size, shapes, True, bucket),
         tr, st)
     metrics = _concat_metrics(parts, axis=1)   # leaves: (S, ticks_total)
     if drain is not None:
@@ -1078,7 +1328,8 @@ def _resolve_mesh(mesh, fleet_size: int):
     return Mesh(np.array(devs[:min(n, cap)]), (FLEET_AXIS,))
 
 
-def _shard_chunk_fn(cfg, chunk: int, shapes, mesh):
+def _shard_chunk_fn(cfg, chunk: int, shapes, mesh,
+                    bucket: int | None = None):
     """Compiled chunk step for a sharded fleet: the SAME vmapped chunk
     body as the cohort path, laid across the mesh with ``shard_map`` —
     each device advances its slice of the fleet independently (no
@@ -1087,23 +1338,22 @@ def _shard_chunk_fn(cfg, chunk: int, shapes, mesh):
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed.shmap import no_check_kwargs, shard_map
-    key = (_cfg_key(cfg), chunk, shapes, "shard",
+    key = (_cfg_key(cfg), chunk, shapes, "shard", bucket,
            tuple(d.id for d in mesh.devices.flat))
     fn = _CHUNK_CACHE.get(key)
     if fn is None:
         model = _make_model(cfg)
-
-        def run_chunk(tr, st):
-            def body(s, _):
-                return fused_tick(cfg, model, tr, s)
-            return jax.lax.scan(body, st, None, length=chunk)
-
+        run_chunk, donate = _chunk_body(cfg, model, chunk, bucket)
         spec = P(FLEET_AXIS)
+        n_args = 1 + len(donate)        # (tr, st[, left])
         sharded = shard_map(jax.vmap(run_chunk), mesh=mesh,
-                            in_specs=(spec, spec), out_specs=(spec, spec),
+                            in_specs=(spec,) * n_args,
+                            out_specs=(spec,) * n_args,
                             **no_check_kwargs())
         fn = _CHUNK_CACHE[key] = _timed_first_call(
-            jax.jit(sharded, donate_argnums=(1,)), "shard.compile_s")
+            jax.jit(sharded, donate_argnums=donate), "shard.compile_s")
+        if bucket is not None:
+            _note_bucket_entry(key)
     return fn
 
 
@@ -1181,9 +1431,11 @@ def run_fleet_shard(cfg, seeds=None, *, chunk: int = 32, wls=None,
             out_shardings=sharding)
     st = init_fn()
     shapes_k = _shapes_key(wls[0], cfg)
-    st, parts, drain = _drive_chunks(
+    driver = _drive_chunks_leap if cfg.leap else _drive_chunks
+    st, parts, drain = driver(
         cfg, chunk,
-        lambda size: _shard_chunk_fn(cfg, size, shapes_k, mesh),
+        lambda size, bucket: _shard_chunk_fn(cfg, size, shapes_k, mesh,
+                                             bucket),
         tr, st)
     metrics = _concat_metrics(parts, axis=1)   # leaves: (padded, ticks)
     # ONE bulk device->host gather, then cheap NumPy slices per member:

@@ -50,10 +50,11 @@ from typing import Any, Mapping, Sequence
 
 import numpy as np
 
-from repro.obs import (DEFAULT_RULES, REGISTRY, build_manifest,
-                       compact_history, evaluate_rules, masked_row_overhead,
-                       render_dashboard, write_alert_log,
-                       obs_summary, span, tracing, write_manifest)
+from repro.obs import (DEFAULT_RULES, REGISTRY, bucketed_row_overhead,
+                       build_manifest, compact_history, evaluate_rules,
+                       masked_row_overhead, render_dashboard,
+                       write_alert_log, obs_summary, span, tracing,
+                       write_manifest)
 from repro.sim.cluster import ClusterConfig
 from repro.sim.engine import (SimConfig, _BatchedForecaster, _make_model,
                               forecast_peaks, run_sim)
@@ -552,6 +553,12 @@ def _run_grid(base: SimConfig,
                 res.forecast_rows,
                 masked_row_overhead=round(
                     masked_row_overhead(res.forecast_rows), 2))
+            if res.forecast_rows.get("rows_bucketed"):
+                # rows the model ACTUALLY computed (scan/shard engines;
+                # compacted when SimConfig.forecast_bucket routed gp/
+                # arima through the bucketed path) vs rows ready
+                rec["forecast_rows"]["bucketed_row_overhead"] = round(
+                    bucketed_row_overhead(res.forecast_rows), 2)
         if res.obs is not None:
             rec["obs"] = obs_summary(res.obs)
             # downsampled per-channel series for the dashboard
@@ -689,6 +696,8 @@ def run_grid(base: SimConfig,
              barrier_timeout_s: float = 0.25,
              chunk: int = 32,
              mesh: int | None = None,
+             leap: bool = False,
+             forecast_bucket: bool = True,
              out_path: str | None = None,
              expect_completed: bool = False,
              forecast_diag: bool = True,
@@ -711,7 +720,17 @@ def run_grid(base: SimConfig,
     histories.  Cells whose engine collects forecast-load telemetry
     additionally get a ``forecast_rows`` block with the derived
     ``masked_row_overhead`` (the padded-batch cost the BENCH_engine
-    ``gp`` block tracks).
+    ``gp`` block tracks) and, on the scan/shard engines,
+    ``bucketed_row_overhead`` (rows the model actually computed under
+    ragged bucketing — see ``SimConfig.forecast_bucket``).
+
+    ``leap=True`` sets ``SimConfig.leap`` on every cell: the scan/shard
+    engines then skip provably-idle tick runs event-driven (bursty
+    traces with long gaps cost ~the number of non-idle ticks).  Results
+    are bit-identical to ``leap=False``; the host engines ignore it.
+    ``forecast_bucket=False`` disables the ragged bucketed gp/arima
+    batching on every cell (A/B lever for the overhead telemetry
+    above; results are bit-identical either way).
 
     ``trace_path`` writes a Chrome trace-event / Perfetto JSON covering
     the driver phases (trace build, jit compile, chunk execute, ring
@@ -741,6 +760,10 @@ def run_grid(base: SimConfig,
     """
     if obs:
         base = _set_path(base, "obs.enabled", True)
+    if leap:
+        base = _set_path(base, "leap", True)
+    if not forecast_bucket:
+        base = _set_path(base, "forecast_bucket", False)
     ctx = (tracing(trace_path) if trace_path is not None
            else contextlib.nullcontext())
     t0 = time.time()
@@ -859,6 +882,14 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
                          "all visible; on CPU force several with "
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N)")
+    ap.add_argument("--leap", action="store_true",
+                    help="scan/shard engines: event-driven leap ticks "
+                         "(skip provably-idle tick runs; bit-identical "
+                         "to uniform ticks)")
+    ap.add_argument("--no-bucket", action="store_true",
+                    help="scan/shard engines: disable ragged bucketed "
+                         "forecast batching (run gp/arima over the "
+                         "full padded row batch every stride)")
     ap.add_argument("--no-batch", action="store_true",
                     help="disable cross-sim forecast batching")
     ap.add_argument("--batch-mode", choices=("leader", "barrier"),
@@ -917,7 +948,8 @@ def main(argv: Sequence[str] | None = None) -> SweepResult:
                       workers=args.workers, engine=args.engine,
                       batch_forecasts=not args.no_batch,
                       batch_mode=args.batch_mode, chunk=args.chunk,
-                      mesh=args.mesh,
+                      mesh=args.mesh, leap=args.leap,
+                      forecast_bucket=not args.no_bucket,
                       forecast_diag=not args.no_diag, out_path=args.out,
                       obs=args.obs, trace_path=args.trace,
                       manifest_path=args.manifest,

@@ -19,9 +19,12 @@ import dataclasses
 import numpy as np
 import pytest
 
+from repro.control import TenancyConfig
 from repro.core.uncertainty import CalibrationConfig
+from repro.obs import ObsConfig
 from repro.sim import (ClusterConfig, SimConfig, WorkloadConfig, generate,
                        run_sim)
+from repro.sim.scenarios import make_config
 from repro.sim.step import run_cohort_scan, run_sim_scan
 
 WL = WorkloadConfig(n_apps=24, max_components=6, max_runtime=1200.0,
@@ -176,6 +179,142 @@ def test_scan_max_ticks_truncation_matches_host():
     assert scan.sim_time == host.sim_time
     assert len(scan.util_cpu) == len(host.util_cpu) == 10
     assert scan.turnaround == host.turnaround
+
+
+# ----------------------------------------------------------------------
+# leap engine: event-driven ticks == uniform ticks, bit for bit
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "family", ["google", "diurnal", "flashcrowd", "heavytail", "colocated"])
+def test_leap_matches_uniform_every_family(family):
+    """``SimConfig.leap=True`` skips provably-idle tick runs with a
+    scalar while_loop that accumulates time EXACTLY like the uniform
+    engine (``t + float32(tick)`` per skipped tick) — so summaries,
+    turnaround tables, per-tick telemetry, tenancy counters AND the
+    drained obs ring histories must all be bit-identical, on every
+    scenario family, with the control plane and rings both live."""
+    cfg = dataclasses.replace(
+        BASE, policy="pessimistic", forecaster="persist",
+        workload=make_config(family, base=WL, n_apps=16, n_tenants=3),
+        control=TenancyConfig(enabled=True),
+        obs=ObsConfig(enabled=True))
+    uni = run_sim_scan(cfg, chunk=16)
+    leap = run_sim_scan(dataclasses.replace(cfg, leap=True), chunk=16)
+    assert _results_equal(uni, leap)
+    assert uni.tenancy == leap.tenancy
+    assert uni.obs is not None and uni.obs.keys() == leap.obs.keys()
+    for name in uni.obs:
+        assert np.array_equal(uni.obs[name], leap.obs[name]), name
+
+
+def test_leap_chunk_invariance_with_calibration():
+    """Leap budgets ride in the scan carry (``left``), not in last-chunk
+    slicing — chunking must still not matter, including for the
+    conformal calibration counters."""
+    cfg = dataclasses.replace(
+        BASE, policy="pessimistic", forecaster="persist", leap=True,
+        calibration=CalibrationConfig(enabled=True, adaptive=True))
+    wl = generate(cfg.workload)
+    r1 = run_sim_scan(cfg, wl, chunk=1)
+    r32 = run_sim_scan(cfg, wl, chunk=32)
+    assert _results_equal(r1, r32)
+    assert r1.calibration == r32.calibration
+
+
+def test_leap_cohort_matches_solo_runs():
+    cfg = dataclasses.replace(BASE, policy="pessimistic",
+                              forecaster="persist", leap=True)
+    seeds = [0, 1]
+    cohort = run_cohort_scan(cfg, seeds, chunk=16)
+    for seed, res in zip(seeds, cohort):
+        solo_cfg = dataclasses.replace(
+            cfg, workload=dataclasses.replace(cfg.workload, seed=seed))
+        assert _results_equal(run_sim_scan(solo_cfg, chunk=16), res), seed
+
+
+def test_leap_max_ticks_truncation_matches_uniform():
+    """A budget that runs out mid-idle-gap must still yield EXACTLY
+    max_ticks of history (the truncated tail of a leap is re-expanded
+    into zero ticks, same as the uniform engine's idle ticks)."""
+    cfg = dataclasses.replace(BASE, policy="pessimistic",
+                              forecaster="persist", max_ticks=10)
+    wl = generate(cfg.workload)
+    uni = run_sim_scan(cfg, wl, chunk=32)
+    leap = run_sim_scan(dataclasses.replace(cfg, leap=True), wl, chunk=32)
+    assert uni.sim_time == leap.sim_time
+    assert len(leap.util_cpu) == 10
+    assert _results_equal(uni, leap)
+
+
+# ----------------------------------------------------------------------
+# ragged bucketed forecast batching (gp / arima)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("forecaster", ["gp", "arima"])
+def test_bucketed_forecast_agrees_with_host_engine(forecaster):
+    """The bucketed path compacts forecast-ready monitor rows into
+    power-of-2 passes; per-row model independence (the documented
+    ``forecast_peaks`` contract) makes it bit-identical to the full
+    padded batch — and hence to the host engine."""
+    cfg = dataclasses.replace(
+        BASE, policy="pessimistic", forecaster=forecaster,
+        workload=dataclasses.replace(WL, n_apps=12))
+    wl = generate(cfg.workload)
+    scan = run_sim_scan(cfg, wl, chunk=16)
+    host = run_sim(cfg, wl)
+    assert scan.turnaround == host.turnaround
+    s, h = scan.summary(), host.summary()
+    for k in ("completed", "failed_frac", "failure_events", "oom_kills",
+              "full_preemptions", "partial_preemptions", "sim_hours"):
+        assert s[k] == h[k], (k, s[k], h[k])
+    # the telemetry proves the bucket engaged: the model computed fewer
+    # rows than ticks_forecasting * the full padded batch
+    fr = scan.forecast_rows
+    assert fr["rows_bucketed"] > 0
+    assert fr["rows_bucketed"] < fr["ticks_forecasting"] * fr["rows_batch"]
+
+
+def test_bucketed_forecast_off_is_bit_identical():
+    cfg = dataclasses.replace(
+        BASE, policy="pessimistic", forecaster="gp",
+        workload=dataclasses.replace(WL, n_apps=12))
+    wl = generate(cfg.workload)
+    on = run_sim_scan(cfg, wl, chunk=16)
+    off = run_sim_scan(dataclasses.replace(cfg, forecast_bucket=False),
+                       wl, chunk=16)
+    assert _results_equal(on, off)
+    # off-path telemetry reports the full padded batch per stride
+    assert off.forecast_rows["rows_bucketed"] == (
+        off.forecast_rows["ticks_forecasting"]
+        * off.forecast_rows["rows_batch"])
+
+
+def test_bucketed_forecast_chunk_invariance():
+    """The bucket is re-chosen per chunk from the host snapshot — an odd
+    chunk size exercises different bucket sequences, yet results must
+    stay bit-identical."""
+    cfg = dataclasses.replace(
+        BASE, policy="pessimistic", forecaster="gp",
+        workload=dataclasses.replace(WL, n_apps=12))
+    wl = generate(cfg.workload)
+    assert _results_equal(run_sim_scan(cfg, wl, chunk=7),
+                          run_sim_scan(cfg, wl, chunk=32))
+
+
+def test_leap_with_bucketed_gp_matches_uniform_unbucketed():
+    """Both tentpole paths composed vs neither: still bit-identical."""
+    cfg = dataclasses.replace(
+        BASE, policy="pessimistic", forecaster="gp",
+        workload=dataclasses.replace(WL, n_apps=12),
+        calibration=CalibrationConfig(enabled=True))
+    wl = generate(cfg.workload)
+    plain = run_sim_scan(
+        dataclasses.replace(cfg, forecast_bucket=False), wl, chunk=16)
+    fast = run_sim_scan(
+        dataclasses.replace(cfg, leap=True), wl, chunk=16)
+    assert _results_equal(plain, fast)
+    assert plain.calibration == fast.calibration
 
 
 # ----------------------------------------------------------------------
