@@ -59,6 +59,13 @@ TOLERANCES = {
     "BENCH_shard.json": (
         ("fleet.speedup", "higher", 0.5),
     ),
+    "BENCH_replay.json": (
+        ("stream.ticks_per_s", "higher", 0.5),
+        # residency ratchet: peak device rows per trace task — a
+        # compaction regression (rows not reclaimed) lands orders of
+        # magnitude above any noise band
+        ("stream.residency", "lower", 1.0),
+    ),
 }
 
 

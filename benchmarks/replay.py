@@ -1,0 +1,174 @@
+"""Replay-at-scale benchmark: streamed trace ingestion at ~10^5 tasks.
+
+The streaming loader (``repro.sim.scenarios.stream``) feeds arrival
+chunks into a bounded device window and re-keys completed slot rows at
+chunk boundaries, so device residency scales with *concurrent* apps —
+not trace length.  This benchmark drives it with a synthetic
+Alibaba-shaped trace (rigid single-component containers, lognormal
+sizes and lifetimes, ~55%-utilized CPU reservations — the shape the
+``alibaba`` replay preset produces from real ``container_usage``
+files) long enough that materializing the full slot table would be the
+bottleneck: 100k tasks through a ~hundred-row window.
+
+Writes ``BENCH_replay.json`` and asserts the acceptance criteria:
+
+  * ``stream_identical`` — on an identity slice of the same trace
+    shape, streamed ingestion is bit-identical to the materialized
+    scan run, uniform AND leap;
+  * ``window_bounded``   — peak loaded rows over the full run stay
+    under :data:`WINDOW_BOUND` (a small multiple of the cluster's
+    admission cap, orders of magnitude below the task count);
+  * ``stream_floor``     — streamed trace-ticks/second stays above
+    :data:`TICKS_PER_S_FLOOR` (best-of timing with the escalating
+    re-measurement policy the other benches use).
+
+Usage::
+
+    python -m benchmarks.replay [--full] [--out BENCH_replay.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+
+TICKS_PER_S_FLOOR = 300.0   # CI CPU floor, ~10x below a healthy run
+WINDOW_BOUND = 256          # peak loaded rows, vs ~1e5 tasks
+SLICE_APPS = 1_500          # identity-slice length (materialized anchor)
+
+from repro.obs.timing import best_of as _best_of  # noqa: E402
+
+
+def synthetic_alibaba(n_apps: int, seed: int = 0):
+    """Alibaba-container-shaped :class:`FittedConfig`.
+
+    Little's-law sizing: arrival rate x mean lifetime ~= 24 concurrent
+    containers, inside the cluster's ``max_running_apps=32`` cap — so
+    the streamed window stays bounded while the cluster runs saturated
+    enough for the shaper to matter.
+    """
+    from repro.sim.scenarios import FittedConfig
+    mean_life = 480.0 * math.exp(0.4 ** 2 / 2)     # lognormal mean, s
+    return FittedConfig(
+        n_apps=n_apps, max_components=1, seed=seed,
+        rate=24.0 / mean_life,
+        runtime_mu=math.log(480.0), runtime_sigma=0.4,
+        cpu_mu=math.log(2.0), cpu_sigma=0.5,        # ~2-core requests
+        mem_mu=math.log(4.0), mem_sigma=0.7,        # ~4 GB requests
+        comp_weights=(1.0,),
+        cpu_level_mu=0.55, cpu_level_sigma=0.22,
+        mem_level_mu=0.60, mem_level_sigma=0.10)
+
+
+def _sim_config(workload):
+    from repro.sim import ClusterConfig, SimConfig
+    return SimConfig(
+        cluster=ClusterConfig(n_hosts=8, max_running_apps=32),
+        workload=workload, policy="pessimistic", forecaster="persist",
+        max_ticks=200_000)
+
+
+def _identity_slice(chunk: int) -> dict:
+    """Streamed == materialized, bit for bit, uniform and leap."""
+    from repro.sim.scenarios import build_trace
+    from repro.sim.scenarios.stream import run_sim_stream
+    from repro.sim.step import run_sim_scan
+
+    fit = synthetic_alibaba(SLICE_APPS)
+    wl = build_trace(fit)
+    cfg = _sim_config(fit)
+
+    def same(a, b):
+        return (a.summary() == b.summary() and a.turnaround == b.turnaround
+                and a.util_cpu == b.util_cpu and a.n_running == b.n_running
+                and a.failed_apps == b.failed_apps)
+
+    mat = run_sim_scan(cfg, wl, chunk=chunk)
+    uni_ok = same(mat, run_sim_stream(cfg, wl, chunk=chunk, window=64))
+    leap_cfg = dataclasses.replace(cfg, leap=True)
+    leap_mat = run_sim_scan(leap_cfg, wl, chunk=chunk)
+    leap_ok = (same(mat, leap_mat)
+               and same(leap_mat, run_sim_stream(leap_cfg, wl, chunk=chunk,
+                                                 window=64)))
+    return {"n_apps": SLICE_APPS, "uniform_identical": uni_ok,
+            "leap_identical": leap_ok,
+            "identical": bool(uni_ok and leap_ok)}
+
+
+def run(quick: bool = True, out: str = "BENCH_replay.json",
+        reps: int = 3) -> dict:
+    from repro.sim.scenarios import build_trace
+    from repro.sim.scenarios.stream import run_sim_stream
+
+    chunk = 32
+    identity = _identity_slice(chunk)
+
+    n_apps = 20_000 if quick else 100_000
+    fit = synthetic_alibaba(n_apps)
+    wl = build_trace(fit)
+    cfg = _sim_config(fit)
+
+    stats: dict = {}
+
+    def streamed():
+        stats.clear()
+        return run_sim_stream(cfg, wl, chunk=chunk, window=64, stats=stats)
+
+    res = streamed()                                 # warm-up + anchor
+    n_ticks = len(res.util_cpu)
+    completed = res.summary()["completed"]
+
+    stream_s = _best_of(streamed, reps)
+    if n_ticks / stream_s < TICKS_PER_S_FLOOR:
+        # noisy-runner re-measurement, same policy as the other benches
+        stream_s = min(stream_s, _best_of(streamed, 2 * reps))
+    ticks_per_s = n_ticks / stream_s
+
+    result = {
+        "schema": 1,
+        "quick": quick,
+        "config": {
+            "n_apps": n_apps, "chunk": chunk, "window": 64,
+            "rate_per_s": round(fit.rate, 5),
+            "max_running_apps": cfg.cluster.max_running_apps,
+            "n_hosts": cfg.cluster.n_hosts,
+        },
+        "identity": identity,
+        "stream": {
+            "n_ticks": n_ticks,
+            "completed": completed,
+            "ticks_per_s": round(ticks_per_s, 1),
+            "tasks_per_s": round(n_apps / stream_s, 1),
+            "window_rows": stats["window_rows"],
+            "peak_rows": stats["peak_rows"],
+            "window_grows": stats["grows"],
+            # residency ratio: device rows actually held vs trace length
+            "residency": round(stats["peak_rows"] / n_apps, 6),
+        },
+        "criteria": {
+            "stream_identical": identity["identical"],
+            "window_bounded": stats["peak_rows"] <= WINDOW_BOUND,
+            "stream_floor": ticks_per_s >= TICKS_PER_S_FLOOR,
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(json.dumps(result["criteria"], indent=1, sort_keys=True))
+    assert all(result["criteria"].values()), result["criteria"]
+    return result
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.replay")
+    ap.add_argument("--full", action="store_true",
+                    help="100k-task trace (default: 20k quick run)")
+    ap.add_argument("--out", default="BENCH_replay.json")
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args(argv)
+    run(quick=not args.full, out=args.out, reps=args.reps)
+
+
+if __name__ == "__main__":
+    main()

@@ -44,7 +44,7 @@ import time
 import traceback
 
 SECTIONS = ("fig2", "fig3", "fig4", "fig5", "scenarios", "calibration",
-            "engine", "shard", "kernels", "obs", "roofline")
+            "engine", "shard", "replay", "kernels", "obs", "roofline")
 
 
 def main() -> None:
@@ -96,6 +96,9 @@ def main() -> None:
                 # skips the throughput criterion
                 from benchmarks import shard
                 shard.run()
+            elif sec == "replay":
+                from benchmarks import replay
+                replay.run(quick)
             elif sec == "kernels":
                 from benchmarks import kernels
                 kernels.main(quick)

@@ -21,12 +21,14 @@ from repro.sim.scenarios.diagnostics import (coverage_report,
                                              sample_usage_series)
 from repro.sim.scenarios.families import (ColocatedConfig, DiurnalConfig,
                                           FlashcrowdConfig, HeavytailConfig)
+from repro.sim.scenarios.fitting import FittedConfig, fit_trace
 from repro.sim.scenarios.registry import (ScenarioSpec, build_trace, get,
                                           make_config, register,
                                           scenario_names, scenario_of)
 from repro.sim.scenarios.replay import ReplayConfig, load_trace, save_trace
 from repro.sim.scenarios.schema import (SEGMENTS, Trace,
                                         TraceValidationError, sort_by_submit)
+from repro.sim.scenarios.stream import StreamConfig, run_sim_stream
 
 __all__ = [
     "SEGMENTS", "Trace", "TraceValidationError", "sort_by_submit",
@@ -34,6 +36,7 @@ __all__ = [
     "make_config", "build_trace",
     "DiurnalConfig", "FlashcrowdConfig", "HeavytailConfig",
     "ColocatedConfig", "ReplayConfig", "load_trace", "save_trace",
+    "FittedConfig", "fit_trace", "StreamConfig", "run_sim_stream",
     "coverage_report", "forecast_error_report", "forecast_reports",
     "sample_usage_series",
 ]

@@ -49,6 +49,8 @@ _BUILTIN = {
     "heavytail": "repro.sim.scenarios.families",
     "colocated": "repro.sim.scenarios.families",
     "replay": "repro.sim.scenarios.replay",
+    "stream": "repro.sim.scenarios.stream",
+    "fitted": "repro.sim.scenarios.fitting",
 }
 
 

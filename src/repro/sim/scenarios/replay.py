@@ -29,6 +29,7 @@ from __future__ import annotations
 import csv
 import dataclasses
 import os
+import warnings
 
 import numpy as np
 
@@ -262,6 +263,35 @@ def _tenant_codes(raw: list) -> np.ndarray:
         return np.asarray([uniq[v] for v in vals], np.int64)
 
 
+# per-app scalar columns that every component row of one app must agree
+# on — a conflict means two different applications share an app_id (the
+# old loader silently kept the first row's values)
+_APP_SCALARS = ("submit", "runtime", "is_elastic", "is_jumpy")
+
+
+def _check_app(aid: str, rs: list[dict]) -> list[dict]:
+    """Validate and canonicalize one app's component rows.
+
+    Rows sort by their declared ``component`` id (the old loader packed
+    them in file order, silently re-keying shuffled components);
+    duplicate component ids and conflicting per-app scalars raise.
+    """
+    for col in _APP_SCALARS:
+        vals = {float(r[col]) for r in rs}
+        if len(vals) > 1:
+            raise ValueError(
+                f"replay app {aid!r}: component rows disagree on "
+                f"{col!r} ({sorted(vals)}) — duplicate app_id reused "
+                "for different applications?")
+    comps = [int(float(r["component"])) for r in rs]
+    if len(set(comps)) != len(comps):
+        raise ValueError(f"replay app {aid!r}: duplicate component ids "
+                         f"{sorted(comps)}")
+    if comps != sorted(comps):
+        rs = [r for _, r in sorted(zip(comps, rs), key=lambda p: p[0])]
+    return rs
+
+
 def _read_rows(path: str) -> list[dict]:
     if path.endswith(".parquet"):
         if _pd is None:
@@ -281,6 +311,13 @@ def load_trace(path: str, n_apps: int = 0, max_components: int = 0,
     columns before parsing — e.g. ``preset="azure"`` ingests Azure-VM-
     trace-style long-format readings (see :data:`PRESETS`).  When not
     given explicitly it defaults to ``cfg.preset``.
+
+    Malformed files are detected rather than silently mangled:
+    applications out of submission order stable-sort with a warning
+    (duplicate arrival times keep file order); component rows sort by
+    their declared ``component`` id; duplicate component ids or
+    component rows that disagree on per-app scalars (``submit``,
+    ``runtime``, ...) raise ``ValueError``.
     """
     if preset is None and cfg is not None and cfg.preset:
         preset = cfg.preset
@@ -300,7 +337,16 @@ def load_trace(path: str, n_apps: int = 0, max_components: int = 0,
     by_app: dict = {}
     for r in rows:
         by_app.setdefault(str(r["app_id"]), []).append(r)
-    apps = sorted(by_app.values(), key=lambda rs: float(rs[0]["submit"]))
+    apps = [_check_app(aid, rs) for aid, rs in by_app.items()]
+    subs = [float(rs[0]["submit"]) for rs in apps]
+    if any(a > b for a, b in zip(subs, subs[1:])):
+        # stable sort: ties (duplicate arrival times) keep file order,
+        # so re-saving the sorted trace is a fixed point
+        warnings.warn(
+            f"replay trace {path}: application rows are not in submission "
+            "order; stable-sorting by submit (ties keep file order)",
+            stacklevel=2)
+    apps.sort(key=lambda rs: float(rs[0]["submit"]))
     if n_apps > 0:
         apps = apps[:n_apps]
 

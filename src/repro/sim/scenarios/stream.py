@@ -1,0 +1,473 @@
+"""Streaming trace ingestion: production-scale replay in a bounded window.
+
+The materialized engines upload the WHOLE trace and size every per-app
+array — the :class:`~repro.sim.state.DeviceTrace` columns and the
+``(N,)`` lifecycle mirrors in :class:`~repro.sim.state.SimState` — by
+total task count.  At 10^5-10^6 tasks (ROADMAP item 2: full
+Alibaba/Azure traces) that padding dwarfs the real working set: only the
+*concurrent* apps matter to any tick.  This module inverts the
+host-side replay-drain pattern for ingestion: the host keeps the full
+trace, the device sees a fixed ``W``-row *window*, and at every chunk
+boundary (where the scan driver already syncs ``st.done``) completed
+rows are harvested to host accumulators, reclaimed, and re-keyed for
+the next arrivals.
+
+Correctness contract — streamed ≡ materialized, bit-identical:
+
+* Every per-tick reduction over the app axis is integer/boolean/min
+  arithmetic (one-hot masked sums, ``argmin``, ``all``), so the window
+  size cannot perturb float accumulation; the ONLY order-sensitive op
+  was the FIFO head ``argmin`` on ties, which now breaks ties on the
+  global app id (``DeviceTrace.gid``) instead of the row index.
+* Free rows carry an inert sentinel (``submit = +inf``, zero demand,
+  ``arrived = done = True``) that every tick phase provably ignores.
+* Arrivals stay exact: the host replays the f32 clock recurrence
+  (`t += tick`, same IEEE-754 rounding as the device) to decide which
+  apps fall due inside the next chunk, and *over*-loading is always
+  safe — the device still gates arrival on ``submit <= t`` — so only a
+  late load could diverge, and the replayed bound makes that
+  impossible.
+* While the stream has apps left, at least one loaded row stays
+  un-arrived past the chunk horizon (the *prefetch invariant*), so
+  ``active`` gating and the leap engine's ``next_sub`` see the true
+  next arrival.
+* In leap mode the per-chunk tick budget is additionally capped by the
+  exact f32 tick count to the first UNLOADED arrival, so an idle skip
+  can never jump past an app the device has not seen; the budget
+  truncation machinery (PR 9) re-splits long skips across boundaries
+  with bit-identical expanded histories.
+
+Turnaround, tenancy, calibration and telemetry accounting survive
+re-keying because none of it is keyed by window row: the slot monitor
+buffers and conformal rings are slot-indexed, tenancy counters are
+tenant-indexed, telemetry rings are drained every boundary, and the
+final drain swaps the harvested global ``(N,)`` lifecycle back in
+before :func:`~repro.sim.state.drain_results` runs.
+
+``StreamConfig`` is itself a registered scenario ("stream") wrapping
+any inner scenario config, so replay presets and synthetic families
+alike can be streamed through ``run_grid(engine="scan"/"shard")``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.sim.scenarios.registry import build_trace, register
+
+__all__ = ["StreamConfig", "StreamWindow", "auto_window",
+           "run_sim_stream"]
+
+# longest idle run (ticks) the host scouts past the loaded horizon per
+# chunk in leap mode; longer gaps split across boundaries (bit-identical
+# — see module docstring) at one chunk dispatch per _LEAP_SCOUT ticks
+_LEAP_SCOUT = 16_384
+
+# SimState lifecycle mirrors that are (N,)-per-app and therefore
+# windowed; everything else in the state is slot-, tenant- or
+# ring-indexed and survives re-keying untouched
+_LIFE = ("arrived", "queued", "done", "failed", "finish_t",
+         "saved_work", "has_saved")
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Streaming wrapper around any registered scenario config.
+
+    ``inner`` is the workload being streamed (a replay preset, a
+    synthetic family, a fitted config — anything registered).  The
+    builder materializes the inner trace on the HOST; the streaming is
+    in the device/compiled footprint, which scales with ``window``
+    (concurrency) instead of total tasks.  ``window = 0`` sizes the
+    window automatically from the slot table; ``seed`` overrides the
+    inner config's seed so the sweep's seed axis works unchanged.
+    """
+
+    inner: Any
+    window: int = 0
+    seed: int | None = None
+
+
+@register("stream", StreamConfig,
+          doc="streaming ingestion wrapper: any scenario in a bounded "
+              "device window")
+def _build(cfg: StreamConfig):
+    inner = cfg.inner
+    if cfg.seed is not None and hasattr(inner, "seed"):
+        inner = dataclasses.replace(inner, seed=cfg.seed)
+    return dataclasses.replace(build_trace(inner), cfg=cfg)
+
+
+def auto_window(cfg, n_apps: int) -> int:
+    """Power-of-two device window: 2x the slot table (queue + prefetch
+    headroom over peak concurrency), floor 64, capped at the trace."""
+    w = 64
+    while w < 2 * cfg.cluster.max_running_apps:
+        w *= 2
+    return min(max(int(n_apps), 1), w)
+
+
+def _f32_ticks(t0: float, tick: float, n: int) -> np.float32:
+    """Clock value after ``n`` device ticks: the exact f32 recurrence
+    (numpy and XLA both round IEEE-754 binary32 to nearest)."""
+    t = np.float32(t0)
+    tk = np.float32(tick)
+    for _ in range(n):
+        t = np.float32(t + tk)
+    return t
+
+
+def _ticks_below(t0: float, tick: float, h: float, limit: int) -> int:
+    """Max ticks executable from ``t0`` with every tick's clock < ``h``
+    under the exact f32 recurrence — the leap budget cap that keeps a
+    skip from crossing an unloaded arrival."""
+    t = np.float32(t0)
+    tk = np.float32(tick)
+    h32 = np.float32(h)
+    k = 0
+    while k < limit:
+        nt = np.float32(t + tk)
+        if not nt < h32:
+            break
+        t = nt
+        k += 1
+    return k
+
+
+class StreamWindow:
+    """Host-side manager of the bounded device window.
+
+    Owns the full host trace, the ``row -> global app`` mapping, the
+    free-row pool, and the harvested global lifecycle accumulators.
+    ``refill`` runs at every chunk boundary; ``finalize`` swaps the
+    global lifecycle back into the final state for the drain.
+    """
+
+    def __init__(self, wl, window: int):
+        self.wl = wl
+        self.N = int(wl.n_apps)
+        self.C = int(wl.max_components)
+        self.W = min(max(int(window), 1), max(self.N, 1))
+        # full trace columns, final dtypes, host-resident
+        self._sub = np.ascontiguousarray(wl.submit, np.float32)
+        self._cols = dict(
+            runtime=np.ascontiguousarray(wl.runtime, np.float32),
+            cpu_req=np.ascontiguousarray(wl.cpu_req, np.float32),
+            mem_req=np.ascontiguousarray(wl.mem_req, np.float32),
+            is_core=np.ascontiguousarray(wl.is_core, bool),
+            is_jumpy=np.ascontiguousarray(wl.is_jumpy, bool),
+            levels=np.ascontiguousarray(wl.levels, np.float32),
+            tenant=np.ascontiguousarray(wl.tenant, np.int32))
+        self.next_load = 0
+        self.row_app = np.full(self.W, -1, np.int64)
+        self.done_g = np.zeros(self.N, bool)
+        self.failed_g = np.zeros(self.N, bool)
+        self.finish_g = np.zeros(self.N, np.float32)
+        self.peak_rows = 0
+        self.grows = 0
+        self._alloc_window(self.W)
+
+    # -- window column storage -----------------------------------------
+
+    def _alloc_window(self, W: int) -> None:
+        S2 = self._cols["levels"].shape[2:]          # (SEGMENTS, 2)
+        self.w_submit = np.full(W, np.inf, np.float32)
+        self.w_runtime = np.ones(W, np.float32)
+        self.w_cpu = np.zeros((W, self.C), np.float32)
+        self.w_mem = np.zeros((W, self.C), np.float32)
+        self.w_core = np.zeros((W, self.C), bool)
+        self.w_jumpy = np.zeros(W, bool)
+        self.w_levels = np.zeros((W, self.C) + S2, np.float32)
+        self.w_tenant = np.zeros(W, np.int32)
+        self.w_gid = np.zeros(W, np.int32)
+
+    def _grow(self, need_free: int) -> None:
+        """Double the window until ``need_free`` rows are free (recorded
+        as a grow event — the next chunk recompiles at the new W)."""
+        old_w, occ = self.W, int((self.row_app >= 0).sum())
+        target = occ + need_free        # <= N: occupied + unloaded apps
+        W = self.W
+        while W < target:
+            W *= 2
+        W = max(min(W, max(self.N, 1)), target)
+        olds = (self.w_submit, self.w_runtime, self.w_cpu, self.w_mem,
+                self.w_core, self.w_jumpy, self.w_levels, self.w_tenant,
+                self.w_gid)
+        old_map = self.row_app
+        self._alloc_window(W)
+        for old, new in zip(olds, (self.w_submit, self.w_runtime,
+                                   self.w_cpu, self.w_mem, self.w_core,
+                                   self.w_jumpy, self.w_levels,
+                                   self.w_tenant, self.w_gid)):
+            new[:old_w] = old
+        self.row_app = np.full(W, -1, np.int64)
+        self.row_app[:old_w] = old_map
+        self.W = W
+        self.grows += 1
+        try:  # observability only; never load-bearing
+            from repro.obs.metrics import REGISTRY
+            REGISTRY.counter("stream.window_grow").inc()
+            REGISTRY.gauge("stream.window_rows").set(W)
+        except Exception:
+            pass
+
+    def _clear_rows(self, rows: np.ndarray) -> None:
+        self.w_submit[rows] = np.inf
+        self.w_runtime[rows] = 1.0
+        self.w_cpu[rows] = 0.0
+        self.w_mem[rows] = 0.0
+        self.w_core[rows] = False
+        self.w_jumpy[rows] = False
+        self.w_levels[rows] = 0.0
+        self.w_tenant[rows] = 0
+        self.w_gid[rows] = 0
+
+    def _set_rows(self, rows: np.ndarray, apps: np.ndarray) -> None:
+        c = self._cols
+        self.w_submit[rows] = self._sub[apps]
+        self.w_runtime[rows] = c["runtime"][apps]
+        self.w_cpu[rows] = c["cpu_req"][apps]
+        self.w_mem[rows] = c["mem_req"][apps]
+        self.w_core[rows] = c["is_core"][apps]
+        self.w_jumpy[rows] = c["is_jumpy"][apps]
+        self.w_levels[rows] = c["levels"][apps]
+        self.w_tenant[rows] = c["tenant"][apps]
+        self.w_gid[rows] = apps.astype(np.int32)
+
+    # -- device views ---------------------------------------------------
+
+    @property
+    def exhausted(self) -> bool:
+        return self.next_load >= self.N
+
+    def device_trace(self):
+        """Fresh window DeviceTrace (bypasses the upload cache — window
+        contents change across boundaries)."""
+        import jax.numpy as jnp
+
+        from repro.sim.state import DeviceTrace
+        return DeviceTrace(
+            submit=jnp.asarray(self.w_submit),
+            runtime=jnp.asarray(self.w_runtime),
+            cpu_req=jnp.asarray(self.w_cpu),
+            mem_req=jnp.asarray(self.w_mem),
+            is_core=jnp.asarray(self.w_core),
+            is_jumpy=jnp.asarray(self.w_jumpy),
+            levels=jnp.asarray(self.w_levels),
+            exists=jnp.asarray(self.w_cpu > 0),
+            tenant=jnp.asarray(self.w_tenant),
+            gid=jnp.asarray(self.w_gid))
+
+    def seal_free(self, st):
+        """Mark every unoccupied row with the inert sentinel lifecycle
+        (``arrived = done = True``) on a fresh ``init_state``."""
+        import jax.numpy as jnp
+        free = self.row_app < 0
+        return dataclasses.replace(
+            st,
+            arrived=jnp.asarray(np.asarray(st.arrived) | free),
+            done=jnp.asarray(np.asarray(st.done) | free))
+
+    # -- the chunk-boundary protocol ------------------------------------
+
+    def refill(self, st, *, t0: float, tick: float, size: int,
+               leap: bool, chunk: int):
+        """Harvest, load, re-key.  Returns ``(st, changed, leap_cap)``:
+        ``changed`` means the window columns moved (rebuild the device
+        trace), ``leap_cap`` is the per-chunk tick-budget cap (``None``
+        = uncapped: stream exhausted)."""
+        done = np.asarray(st.done)
+
+        # 1. harvest completed rows into the global accumulators
+        harv = (self.row_app >= 0) & done[:self.W]
+        freed = np.nonzero(harv)[0]
+        if freed.size:
+            g = self.row_app[freed]
+            self.done_g[g] = True
+            self.failed_g[g] = np.asarray(st.failed)[freed]
+            self.finish_g[g] = np.asarray(st.finish_t)[freed]
+            self.row_app[freed] = -1
+            self._clear_rows(freed)
+
+        # 2. apps due inside the chunk: exact f32 clock bound (uniform
+        # chunks execute exactly `size` ticks; leap uses the nominal
+        # horizon — the cap below owns correctness past it)
+        t_end = float(_f32_ticks(t0, tick, size))
+        beyond = int(np.searchsorted(self._sub, np.float32(t_end),
+                                     side="right"))
+        hi = max(beyond, self.next_load)
+
+        # 3. prefetch invariant: keep one loaded row un-arrived PAST the
+        # chunk horizon so `active` stays true and next_sub is the true
+        # next arrival.  Loads are prefix-ordered, so apps in
+        # [beyond, next_load) are loaded-beyond-horizon rows; only when
+        # that range is empty does one extra app need loading.
+        if hi < self.N and beyond >= self.next_load:
+            hi += 1
+
+        # 4. leap budget cap: exact tick count to the first UNLOADED
+        # arrival; force-load apps that would cap the chunk below its
+        # step count so progress is always >= min(budget, chunk) ticks
+        cap = None
+        if leap:
+            while hi < self.N:
+                cap = _ticks_below(t0, tick, float(self._sub[hi]),
+                                   _LEAP_SCOUT)
+                if cap >= chunk:
+                    break
+                hi += 1
+                cap = None
+
+        # 5. assign due apps to free rows (grow on overflow)
+        to_load = np.arange(self.next_load, hi)
+        if to_load.size:
+            free_rows = np.nonzero(self.row_app < 0)[0]
+            if to_load.size > free_rows.size:
+                self._grow(to_load.size)
+                free_rows = np.nonzero(self.row_app < 0)[0]
+            rows = free_rows[:to_load.size]
+            self._set_rows(rows, to_load)
+            self.row_app[rows] = to_load
+            self.next_load = hi
+
+        self.peak_rows = max(self.peak_rows,
+                             int((self.row_app >= 0).sum()))
+        changed = bool(freed.size) or bool(to_load.size)
+        if changed:
+            st = self._push_lifecycle(st, freed, to_load)
+        return st, changed, cap
+
+    def _push_lifecycle(self, st, freed: np.ndarray,
+                        loaded_apps: np.ndarray):
+        """Re-key the (W,) lifecycle mirrors: freed rows get the inert
+        sentinel, freshly loaded rows a virgin lifecycle; grown rows
+        appear as sentinel free rows."""
+        import jax.numpy as jnp
+        life = {f: np.array(getattr(st, f)) for f in _LIFE}  # mutable copies
+        W0 = life["done"].shape[0]
+        if self.W > W0:                       # window grew this refill
+            for f, v in life.items():
+                pad = np.zeros(self.W - W0, v.dtype)
+                if f in ("arrived", "done"):
+                    pad[:] = True
+                life[f] = np.concatenate([v, pad])
+        sentinel = dict(arrived=True, queued=False, done=True,
+                        failed=False, finish_t=0.0, saved_work=0.0,
+                        has_saved=False)
+        virgin = {**sentinel, "arrived": False, "done": False}
+        if freed.size:
+            for f, v in sentinel.items():
+                life[f][freed] = v
+        if loaded_apps.size:
+            rows = np.nonzero(np.isin(self.row_app, loaded_apps))[0]
+            for f, v in virgin.items():
+                life[f][rows] = v
+        return dataclasses.replace(
+            st, **{f: jnp.asarray(v) for f, v in life.items()})
+
+    # -- final drain ----------------------------------------------------
+
+    def finalize(self, st):
+        """Swap the harvested global ``(N,)`` lifecycle into the final
+        state so :func:`~repro.sim.state.drain_results` (turnaround,
+        failed set, tenancy summary) sees every app of the full trace."""
+        import jax.numpy as jnp
+        done = np.asarray(st.done)
+        occ = self.row_app >= 0
+        rows = np.nonzero(occ)[0]
+        if rows.size:
+            g = self.row_app[rows]
+            self.done_g[g] = done[rows]
+            self.failed_g[g] = np.asarray(st.failed)[rows]
+            self.finish_g[g] = np.asarray(st.finish_t)[rows]
+        return dataclasses.replace(
+            st, done=jnp.asarray(self.done_g),
+            failed=jnp.asarray(self.failed_g),
+            finish_t=jnp.asarray(self.finish_g))
+
+    def stats(self) -> dict:
+        return {"window_rows": int(self.W),
+                "peak_rows": int(self.peak_rows),
+                "grows": int(self.grows),
+                "n_apps": int(self.N),
+                "loaded": int(self.next_load)}
+
+
+def run_sim_stream(cfg, wl=None, *, chunk: int = 32, window: int = 0,
+                   stats: dict | None = None):
+    """Run one simulation with streamed ingestion on the scan engine.
+
+    Bit-identical to ``run_sim_scan`` on the materialized trace (the
+    correctness anchor of tests/test_replay_scale.py); the device and
+    compiled-program footprint scales with the window (peak concurrency)
+    instead of total tasks.  ``stats`` (optional dict) receives window
+    telemetry: peak occupied rows, grow events, final window size.
+    """
+    import jax.numpy as jnp
+
+    from repro.sim.state import drain_results, init_state
+    from repro.sim.step import (_bucketed, _chunk_fn, _concat_metrics,
+                                _pick_bucket, _ring_drain)
+
+    if wl is None:
+        wl = build_trace(cfg.workload)
+    if not window and isinstance(cfg.workload, StreamConfig):
+        window = cfg.workload.window
+    win = StreamWindow(wl, window or auto_window(cfg, wl.n_apps))
+    tick = float(cfg.cluster.tick)
+    st = win.seal_free(init_state(cfg, win.W, wl.max_components))
+    drain = _ring_drain(cfg, chunk, st)
+    bucketing = _bucketed(cfg)
+    parts: list = []
+    tr = None
+
+    def fn_for(size, bucket):
+        # same shapes key a materialized W-app trace would produce, so
+        # streamed and materialized runs of equal geometry share one
+        # compiled program
+        shapes = (win.W, win.C, cfg.cluster.max_running_apps, cfg.window)
+        return _chunk_fn(cfg, size, shapes, False, bucket)
+
+    if not cfg.leap:
+        remaining = cfg.max_ticks
+        while remaining > 0:
+            size = min(chunk, remaining)
+            t0 = float(np.asarray(st.t))
+            st, changed, _ = win.refill(st, t0=t0, tick=tick, size=size,
+                                        leap=False, chunk=chunk)
+            if changed or tr is None:
+                tr = win.device_trace()
+            fn = fn_for(size, _pick_bucket(cfg, st) if bucketing else None)
+            st, ms = fn(tr, st)
+            parts.append(ms)
+            remaining -= size
+            if drain is not None:
+                drain.drain(st.obs)
+            if win.exhausted and bool(np.asarray(st.done).all()):
+                break
+    else:
+        left_budget = cfg.max_ticks
+        while left_budget > 0:
+            t0 = float(np.asarray(st.t))
+            st, changed, cap = win.refill(st, t0=t0, tick=tick,
+                                          size=chunk, leap=True,
+                                          chunk=chunk)
+            if changed or tr is None:
+                tr = win.device_trace()
+            left = left_budget if cap is None else min(left_budget, cap)
+            fn = fn_for(chunk, _pick_bucket(cfg, st) if bucketing else None)
+            st, left_out, ms = fn(tr, st, jnp.asarray(np.int32(left)))
+            parts.append(ms)
+            left_budget -= left - int(np.asarray(left_out))
+            if drain is not None:
+                drain.drain(st.obs)
+            if win.exhausted and bool(np.asarray(st.done).all()):
+                break
+    st = win.finalize(st)
+    if stats is not None:
+        stats.update(win.stats())
+    return drain_results(cfg, wl, st, _concat_metrics(parts),
+                         obs=drain.history(0) if drain is not None
+                         else None)

@@ -71,9 +71,14 @@ class DeviceTrace:
     levels: Array     # (N, C, SEGMENTS, 2) f32 utilization knots
     exists: Array     # (N, C) bool == cpu_req > 0
     tenant: Array     # (N,) i32 owning tenant (all zero when untagged)
+    gid: Array        # (N,) i32 global app id — row index for a fully
+    #                   materialized trace; the streamed engine re-keys
+    #                   window rows so gid keeps the submission-order
+    #                   identity a row had in the full trace
 
     @classmethod
     def from_trace(cls, wl) -> "DeviceTrace":
+        n = len(np.asarray(wl.submit))
         return cls(
             submit=jnp.asarray(wl.submit, jnp.float32),
             runtime=jnp.asarray(wl.runtime, jnp.float32),
@@ -83,7 +88,8 @@ class DeviceTrace:
             is_jumpy=jnp.asarray(wl.is_jumpy, bool),
             levels=jnp.asarray(wl.levels, jnp.float32),
             exists=jnp.asarray(wl.cpu_req > 0, bool),
-            tenant=jnp.asarray(wl.tenant, jnp.int32))
+            tenant=jnp.asarray(wl.tenant, jnp.int32),
+            gid=jnp.arange(n, dtype=jnp.int32))
 
     @classmethod
     def from_traces(cls, wls, pad_to: int | None = None) -> "DeviceTrace":
@@ -110,7 +116,9 @@ class DeviceTrace:
             is_jumpy=col(lambda w: w.is_jumpy, bool),
             levels=col(lambda w: w.levels, np.float32),
             exists=col(lambda w: w.cpu_req > 0, bool),
-            tenant=col(lambda w: w.tenant, np.int32))
+            tenant=col(lambda w: w.tenant, np.int32),
+            gid=col(lambda w: np.arange(len(np.asarray(w.submit))),
+                    np.int32))
 
 
 @jax.tree_util.register_dataclass

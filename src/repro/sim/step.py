@@ -617,7 +617,14 @@ def _admit_queued(cfg, tr: DeviceTrace, st: SimState, t: Array,
         cur, resets, _ = carry
         qm = _q(cur.queued)
         has_q = qm.any()
-        head = jnp.argmin(jnp.where(qm, tr.submit, jnp.inf))
+        # FIFO head: earliest submit, ties broken by global app id so
+        # admission order is independent of a row's position in the
+        # table (materialized traces have gid == row index, so this is
+        # bit-identical to the plain argmin; the streamed engine re-keys
+        # window rows and relies on the gid tie-break)
+        smin = jnp.min(jnp.where(qm, tr.submit, jnp.inf))
+        tied = qm & (tr.submit == smin)
+        head = jnp.argmin(jnp.where(tied, tr.gid, jnp.iinfo(jnp.int32).max))
         empty = cur.slot_gid < 0
         slot = jnp.argmax(empty)
         fits, placement = try_place(cur, head)
@@ -1234,6 +1241,11 @@ def run_sim_scan(cfg, wl=None, *, chunk: int = 32) -> SimResults:
     (bit-identical; see module docstring for the correctness anchors).
     """
     from repro.sim.scenarios.registry import build_trace
+    from repro.sim.scenarios.stream import StreamConfig, run_sim_stream
+    if isinstance(cfg.workload, StreamConfig):
+        # streamed ingestion: bounded device window, rows re-keyed at
+        # chunk boundaries (bit-identical to the materialized run)
+        return run_sim_stream(cfg, wl, chunk=chunk)
     wl = wl if wl is not None else build_trace(cfg.workload)
     tr = _device_trace([wl], batched=False)
     st = init_state(cfg, wl.n_apps, wl.max_components)
@@ -1259,6 +1271,7 @@ def run_cohort_scan(cfg, seeds, *, chunk: int = 32,
     bit-identical to its ``run_sim_scan`` solo run.
     """
     from repro.sim.scenarios.registry import build_trace
+    from repro.sim.scenarios.stream import StreamConfig
     seeds = list(seeds)
     if not seeds:
         return []
@@ -1267,6 +1280,12 @@ def run_cohort_scan(cfg, seeds, *, chunk: int = 32,
         for s in seeds]
     if wls is None:
         wls = [build_trace(c.workload) for c in cfgs]
+    if isinstance(cfg.workload, StreamConfig):
+        # streamed members keep their own windows (the vmapped path
+        # assumes one static trace layout per member) — solo streamed
+        # runs per seed, each still bit-identical to its scan run
+        return [run_sim_scan(c, w, chunk=chunk)
+                for c, w in zip(cfgs, wls)]
     if len(seeds) == 1:
         # a cohort of one is just a solo run (and must not go through
         # the vmapped path, whose trace/state layouts carry a seed axis)
@@ -1404,6 +1423,14 @@ def run_fleet_shard(cfg, seeds=None, *, chunk: int = 32, wls=None,
                 "static in the SPMD program)")
     if wls is None:
         wls = [build_trace(c.workload) for c in cfgs]
+    from repro.sim.scenarios.stream import StreamConfig
+    if any(isinstance(c.workload, StreamConfig) for c in cfgs):
+        # streamed members re-key their device windows at chunk
+        # boundaries, which the static SPMD fleet layout cannot express
+        # — fall back to solo streamed runs per member (bit-identical
+        # to what the fleet would produce)
+        return [run_sim_scan(c, w, chunk=chunk)
+                for c, w in zip(cfgs, wls)]
     shapes = {(int(w.n_apps), int(w.max_components)) for w in wls}
     if len(shapes) != 1:
         raise ValueError(f"fleet traces disagree on shape: {shapes}")

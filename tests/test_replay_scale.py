@@ -1,0 +1,431 @@
+"""Replay-at-scale anchors: streamed ingestion, slot compaction, trace
+loading hygiene, arrival-process fitting, and property-based Trace laws.
+
+The streaming engine's contract (``repro.sim.scenarios.stream``):
+
+  * STREAM IDENTITY — feeding a trace through the bounded device window
+    (rows harvested and re-keyed at chunk boundaries) is bit-identical
+    to materializing the whole trace up front, on every engine;
+  * COMPACTION INVARIANCE — window size (tiny + growth, exact-fit,
+    auto) and tick chunking never change results;
+  * BOUNDED RESIDENCY — peak loaded rows track *concurrency*, not
+    trace length.
+
+Property tests use real hypothesis when installed (CI) and skip via the
+``tests/conftest.py`` shim otherwise — both paths are exercised below.
+"""
+import csv
+import dataclasses
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
+
+from repro.control import TenancyConfig
+from repro.control.config import SLO_CLASSES
+from repro.obs import ObsConfig
+from repro.sim import ClusterConfig, SimConfig, run_sim
+from repro.sim.scenarios import (FittedConfig, SEGMENTS, StreamConfig, Trace,
+                                 build_trace, fit_trace, load_trace,
+                                 make_config, save_trace)
+from repro.sim.scenarios.replay import ReplayConfig, _pd, _tenant_codes
+from repro.sim.scenarios.stream import run_sim_stream
+from repro.sim.step import run_fleet_shard, run_sim_scan
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+WL = make_config("colocated", n_apps=24, max_components=4, seed=5)
+BASE = SimConfig(cluster=ClusterConfig(n_hosts=3, max_running_apps=16),
+                 workload=WL, policy="pessimistic", forecaster="persist",
+                 max_ticks=4000)
+
+
+def _results_equal(a, b) -> bool:
+    return (a.summary() == b.summary()
+            and a.turnaround == b.turnaround
+            and a.failed_apps == b.failed_apps
+            and a.util_cpu == b.util_cpu and a.util_mem == b.util_mem
+            and a.n_running == b.n_running)
+
+
+# ----------------------------------------------------------------------
+# stream identity: streamed == materialized, per engine
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("leap", [False, True])
+def test_streamed_matches_materialized_scan(leap):
+    cfg = dataclasses.replace(BASE, leap=leap)
+    wl = build_trace(WL)
+    mat = run_sim_scan(cfg, wl, chunk=16)
+    stats = {}
+    stream = run_sim_stream(cfg, wl, chunk=16, window=8, stats=stats)
+    assert _results_equal(mat, stream)
+    assert stats["loaded"] == wl.n_apps
+
+
+def test_stream_config_dispatches_through_scan():
+    scfg = StreamConfig(inner=WL, window=8)
+    cfg = dataclasses.replace(BASE, workload=scfg)
+    res = run_sim_scan(cfg, chunk=16)
+    mat = run_sim_scan(BASE, build_trace(WL), chunk=16)
+    assert _results_equal(mat, res)
+
+
+def test_streamed_matches_materialized_host():
+    # the host engine materializes StreamConfig through the registry
+    # builder — same trace, same result
+    cfg = dataclasses.replace(BASE, workload=StreamConfig(inner=WL))
+    host = run_sim(cfg, build_trace(StreamConfig(inner=WL)))
+    mat = run_sim(BASE, build_trace(WL))
+    assert host.turnaround == mat.turnaround
+    assert host.summary() == mat.summary()
+
+
+def test_streamed_matches_materialized_shard():
+    seeds = [0, 1]
+    mat = run_fleet_shard(BASE, seeds, chunk=16, mesh=1)
+    scfg = dataclasses.replace(
+        BASE, workload=StreamConfig(inner=WL, window=8))
+    stream = run_fleet_shard(scfg, seeds, chunk=16, mesh=1)
+    assert len(mat) == len(stream) == len(seeds)
+    for m, s in zip(mat, stream):
+        assert _results_equal(m, s)
+
+
+def test_run_grid_scan_engine_streams():
+    """Sweep wiring: a StreamConfig base workload routes every scan
+    cell through streamed ingestion, matching the materialized sweep."""
+    from repro.sim.sweep import run_grid
+    scfg = dataclasses.replace(BASE, workload=StreamConfig(inner=WL,
+                                                           window=8))
+    stream = run_grid(scfg, axes={"policy": ["baseline", "pessimistic"]},
+                      seeds=[0], engine="scan", chunk=16,
+                      forecast_diag=False)
+    mat = run_grid(BASE, axes={"policy": ["baseline", "pessimistic"]},
+                   seeds=[0], engine="scan", chunk=16,
+                   forecast_diag=False)
+    assert len(stream.cells) == len(mat.cells) == 2
+    for s, m in zip(stream.cells, mat.cells):
+        assert s["summary"] == m["summary"], s["name"]
+
+
+# ----------------------------------------------------------------------
+# compaction invariance
+# ----------------------------------------------------------------------
+
+def test_compaction_on_off_equality():
+    """Tiny window (rows harvested + re-keyed every boundary) == window
+    covering the whole trace (no re-keying ever needed)."""
+    wl = build_trace(WL)
+    stats_on, stats_off = {}, {}
+    on = run_sim_stream(BASE, wl, chunk=16, window=8, stats=stats_on)
+    off = run_sim_stream(BASE, wl, chunk=16, window=wl.n_apps,
+                         stats=stats_off)
+    assert _results_equal(on, off)
+    assert on.summary() == off.summary()
+    # the tiny window really did compact (grew lazily, stayed < n_apps
+    # only if concurrency allowed; at minimum it started at 8)
+    assert stats_off["grows"] == 0
+
+
+def test_chunk_invariance_with_compaction():
+    wl = build_trace(WL)
+    r1 = run_sim_stream(BASE, wl, chunk=1, window=8)
+    r32 = run_sim_stream(BASE, wl, chunk=32, window=8)
+    assert _results_equal(r1, r32)
+
+
+def test_leap_obs_tenancy_composition_on_replayed_trace():
+    """Full composition on a replayed trace: leap ticks + telemetry
+    rings + the tenant control plane, streamed vs materialized."""
+    wl = load_trace(os.path.join(DATA, "alibaba_tiny.csv"),
+                    preset="alibaba")
+    cfg = dataclasses.replace(
+        BASE, workload=ReplayConfig(path="unused"), leap=True,
+        obs=ObsConfig(enabled=True),
+        control=TenancyConfig(enabled=True, max_tenants=4),
+        max_ticks=2000)
+    mat = run_sim_scan(cfg, wl, chunk=16)
+    stream = run_sim_stream(cfg, wl, chunk=16, window=2)
+    assert _results_equal(mat, stream)
+    assert mat.tenancy == stream.tenancy
+    assert mat.obs.keys() == stream.obs.keys()
+    for k in mat.obs:
+        assert np.array_equal(mat.obs[k], stream.obs[k]), k
+
+
+def test_window_bounded_by_concurrency():
+    """A long sparse trace streams through a window that tracks peak
+    concurrency, far below the trace length."""
+    fit = FittedConfig(n_apps=96, max_components=1, seed=2,
+                       rate=1.0 / 600.0, runtime_mu=np.log(600.0),
+                       runtime_sigma=0.3)
+    wl = build_trace(fit)
+    cfg = dataclasses.replace(BASE, workload=fit, leap=True,
+                              max_ticks=2_000_000)
+    stats = {}
+    stream = run_sim_stream(cfg, wl, chunk=16, window=16, stats=stats)
+    assert stats["loaded"] == 96
+    assert stats["peak_rows"] <= 16 and stats["grows"] == 0
+    mat = run_sim_scan(cfg, wl, chunk=16)
+    assert _results_equal(mat, stream)
+
+
+# ----------------------------------------------------------------------
+# load_trace hygiene (regression: silently mangled malformed files)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("fixture,preset", [
+    ("alibaba_tiny.csv", "alibaba"), ("azure_tiny.csv", "azure")])
+def test_fixture_csvs_load_without_warnings(fixture, preset):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        tr = load_trace(os.path.join(DATA, fixture), preset=preset)
+    assert tr.n_apps == 3
+    assert np.all(np.diff(tr.submit) >= 0)
+
+
+def _rewrite(path, rows):
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+
+
+@pytest.fixture()
+def saved_trace(tmp_path):
+    tr = build_trace(make_config("colocated", n_apps=6, max_components=4,
+                                 seed=0))
+    p = str(tmp_path / "t.csv")
+    save_trace(tr, p)
+    return tr, p
+
+
+def test_unsorted_rows_warn_and_stable_sort(saved_trace):
+    tr, p = saved_trace
+    rows = list(csv.DictReader(open(p)))
+    _rewrite(p, rows[::-1])   # reversed: apps AND component rows shuffled
+    with pytest.warns(UserWarning, match="submission order"):
+        back = load_trace(p)
+    assert np.array_equal(back.submit, tr.submit)
+    assert np.array_equal(back.cpu_req, tr.cpu_req)
+    assert np.array_equal(back.is_core, tr.is_core)
+    assert np.array_equal(back.levels, tr.levels)
+
+
+def test_conflicting_app_scalars_raise(saved_trace):
+    _, p = saved_trace
+    rows = list(csv.DictReader(open(p)))
+    multi = [r["app_id"] for r in rows
+             if sum(q["app_id"] == r["app_id"] for q in rows) > 1][0]
+    for r in rows:
+        if r["app_id"] == multi:
+            r["submit"] = str(float(r["submit"]) + 7.0)
+            break
+    _rewrite(p, rows)
+    with pytest.raises(ValueError, match="disagree"):
+        load_trace(p)
+
+
+def test_duplicate_component_ids_raise(saved_trace):
+    _, p = saved_trace
+    rows = list(csv.DictReader(open(p)))
+    aid = [r["app_id"] for r in rows
+           if sum(q["app_id"] == r["app_id"] for q in rows) > 1][0]
+    multi = [r for r in rows if r["app_id"] == aid]
+    multi[1]["component"] = multi[0]["component"]
+    _rewrite(p, rows)
+    with pytest.raises(ValueError, match="duplicate component"):
+        load_trace(p)
+
+
+# ----------------------------------------------------------------------
+# arrival-process fitting
+# ----------------------------------------------------------------------
+
+def test_fit_trace_recovers_operating_point():
+    src = FittedConfig(n_apps=400, max_components=1, seed=9,
+                       rate=1.0 / 120.0, runtime_mu=6.0, runtime_sigma=0.5)
+    fit = fit_trace(build_trace(src))
+    assert fit.n_apps == 400 and fit.max_components == 1
+    assert abs(fit.rate - src.rate) / src.rate < 0.25
+    assert abs(fit.runtime_mu - src.runtime_mu) < 0.25
+    assert fit.comp_weights == (1.0,)
+
+
+def test_fit_replay_fixture_and_scale_out():
+    tr = load_trace(os.path.join(DATA, "alibaba_tiny.csv"),
+                    preset="alibaba")
+    fit = fit_trace(tr)
+    assert fit.n_tenants == tr.n_tenants
+    big = build_trace(dataclasses.replace(fit, n_apps=300, seed=1))
+    big.validate()
+    assert big.n_apps == 300
+    assert np.all(np.diff(big.submit) >= 0)
+    # deterministic per seed
+    again = build_trace(dataclasses.replace(fit, n_apps=300, seed=1))
+    assert np.array_equal(big.submit, again.submit)
+    assert np.array_equal(big.levels, again.levels)
+
+
+def test_fitted_mixed_population_round_trip():
+    col = build_trace(make_config("colocated", n_apps=48, max_components=4,
+                                  seed=0))
+    fit = fit_trace(col)
+    assert 0.0 < fit.elastic_frac < 1.0
+    syn = build_trace(dataclasses.replace(fit, n_apps=64, seed=2))
+    syn.validate()
+    assert syn.is_elastic.any() and (~syn.is_elastic).any()
+
+
+# ----------------------------------------------------------------------
+# hypothesis shim: both the real and the fallback path work
+# ----------------------------------------------------------------------
+
+def test_optional_hypothesis_shim_skips_cleanly(monkeypatch):
+    import builtins
+
+    real_import = builtins.__import__
+
+    def no_hypothesis(name, *a, **k):
+        if name.split(".")[0] == "hypothesis":
+            raise ModuleNotFoundError(name)
+        return real_import(name, *a, **k)
+
+    monkeypatch.setattr(builtins, "__import__", no_hypothesis)
+    g, s, stg = optional_hypothesis()
+    assert stg.integers(0, 5) is stg.composite(lambda d: d)  # absorber
+
+    @s(max_examples=3)
+    @g(stg.integers())
+    def prop():
+        raise AssertionError("shimmed property body must never run")
+
+    with pytest.raises(pytest.skip.Exception):
+        prop()
+
+
+def test_optional_hypothesis_real_path():
+    hyp = pytest.importorskip("hypothesis")
+    g, s, stg = optional_hypothesis()
+    assert g is hyp.given
+
+
+# ----------------------------------------------------------------------
+# property-based Trace laws (real strategies under CI's hypothesis)
+# ----------------------------------------------------------------------
+
+_f32 = st.floats(min_value=0.0, max_value=1.0, allow_nan=False, width=32)
+
+
+@st.composite
+def _trace_specs(draw):
+    n = draw(st.integers(min_value=1, max_value=5))
+    c = draw(st.integers(min_value=1, max_value=3))
+    submit = draw(st.lists(
+        st.floats(min_value=0.0, max_value=1e4, allow_nan=False, width=32),
+        min_size=n, max_size=n))
+    runtime = draw(st.lists(
+        st.floats(min_value=1.0, max_value=1e4, allow_nan=False, width=32),
+        min_size=n, max_size=n))
+    ncomp = draw(st.lists(st.integers(1, c), min_size=n, max_size=n))
+    knots = draw(st.lists(_f32, min_size=8, max_size=8))
+    tenant = draw(st.lists(st.integers(0, 3), min_size=n, max_size=n))
+    slo = draw(st.lists(st.integers(0, len(SLO_CLASSES) - 1),
+                        min_size=n, max_size=n))
+    return n, c, submit, runtime, ncomp, knots, tenant, slo
+
+
+def _make_trace(spec) -> Trace:
+    n, c, submit, runtime, ncomp, knots, tenant, slo = spec
+    idx = np.arange(c)[None, :]
+    exists = idx < np.asarray(ncomp)[:, None]
+    cpu = np.where(exists, 1.0 + idx.astype(np.float32), 0.0)
+    lv = np.resize(np.asarray(knots, np.float32),
+                   (n, c, SEGMENTS, 2)) * exists[:, :, None, None]
+    return Trace(
+        submit=np.sort(np.asarray(submit, np.float32)),
+        is_elastic=np.zeros(n, bool), is_jumpy=np.zeros(n, bool),
+        n_core=np.asarray(ncomp, np.int64),
+        n_elastic=np.zeros(n, np.int64),
+        runtime=np.asarray(runtime, np.float32),
+        cpu_req=cpu.astype(np.float32),
+        mem_req=(cpu * 2).astype(np.float32),
+        is_core=exists, levels=np.clip(lv, 0, 1).astype(np.float32),
+        tenant=np.asarray(tenant, np.int64),
+        slo=np.asarray(slo, np.int64)).validate()
+
+
+@settings(max_examples=25, deadline=None)
+@given(_trace_specs())
+def test_property_arrival_monotone_after_load(spec):
+    """Any row permutation of a saved trace loads back sorted — arrival
+    monotonicity is a postcondition of load_trace, not of the file."""
+    import tempfile
+    tr = _make_trace(spec)
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.csv")
+        save_trace(tr, p)
+        rows = list(csv.DictReader(open(p)))
+        _rewrite(p, rows[::-1])
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            back = load_trace(p)
+    assert np.all(np.diff(back.submit) >= 0)
+    assert np.array_equal(np.sort(back.submit), np.sort(tr.submit))
+
+
+@settings(max_examples=25, deadline=None)
+@given(_trace_specs())
+def test_property_float32_roundtrip(spec):
+    """save_trace -> load_trace is float32-exact for every column."""
+    import tempfile
+    tr = _make_trace(spec)
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.csv")
+        save_trace(tr, p)
+        back = load_trace(p)
+    assert np.array_equal(back.submit, tr.submit)
+    assert np.array_equal(back.runtime, tr.runtime)
+    assert np.array_equal(back.cpu_req, tr.cpu_req)
+    assert np.array_equal(back.mem_req, tr.mem_req)
+    assert np.array_equal(back.levels, tr.levels)
+    assert np.array_equal(back.slo, tr.slo)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from(["t-a", "t-b", "7", "", "tenant-x"]),
+                min_size=1, max_size=12))
+def test_property_tenant_codes_dense(names):
+    """String tenant ids re-encode densely: codes are exactly 0..k-1
+    and preserve the equality classes of the raw ids."""
+    codes = _tenant_codes(list(names))
+    uniq = sorted(set(codes.tolist()))
+    assert uniq == list(range(len(uniq)))
+    norm = ["0" if v == "" else v for v in names]
+    for i in range(len(names)):
+        for j in range(len(names)):
+            assert (codes[i] == codes[j]) == (norm[i] == norm[j])
+
+
+@settings(max_examples=25, deadline=None)
+@given(_trace_specs())
+def test_property_parquet_roundtrip(spec):
+    if _pd is None:
+        pytest.skip("pandas/pyarrow not installed")
+    import tempfile
+    tr = _make_trace(spec)
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.parquet")
+        try:
+            save_trace(tr, p)
+        except (ImportError, ValueError):
+            pytest.skip("no parquet engine available")
+        back = load_trace(p)
+    assert np.array_equal(back.levels, tr.levels)
+    assert np.array_equal(back.cpu_req, tr.cpu_req)
